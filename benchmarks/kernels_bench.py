@@ -1,0 +1,99 @@
+"""Kernel microbenchmarks.
+
+Wall-clock on this container measures the jnp reference on CPU (the Pallas
+kernels execute on TPU only); ``derived`` reports the analytic TPU-v5e
+roofline time for the kernel's tile schedule — the number the §Perf analysis
+uses — plus the kernel's arithmetic intensity.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw
+from repro.kernels import ref
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    chip = hw.V5E
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    # flash attention tiles
+    for (b, s, hq, hkv, d, window) in [(1, 2048, 8, 2, 128, None),
+                                       (1, 4096, 8, 2, 128, 512)]:
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+        fn = jax.jit(lambda q, k, v: ref.mha_ref(q, k, v, causal=True,
+                                                 window=window))
+        cpu = _t(fn, q, k, v)
+        span = min(window or s, s)
+        flops = 2 * 2 * b * s * span * hq * d / 2
+        io = (3 * b * s * hq * d + b * s * hq * d) * 2  # flash: q,k,v + out
+        tpu = max(flops / chip.peak_flops_bf16, io / chip.hbm_bw)
+        rows.append((f"kernels/flash_mha/s{s}w{window}", cpu * 1e6,
+                     f"tpu_roofline_us={tpu*1e6:.0f},"
+                     f"intensity={flops/io:.0f}"))
+
+    # decode attention
+    for (b, cap, hq, hkv, d) in [(64, 32768, 8, 2, 128)]:
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, cap, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, cap, hkv, d), jnp.float32)
+        cl = jnp.full((b,), cap, jnp.int32)
+        fn = jax.jit(lambda q, k, v, cl: ref.decode_mha_ref(q, k, v,
+                                                            cache_len=cl))
+        cpu = _t(fn, q, k, v, cl)
+        io = 2 * b * cap * hkv * d * 2
+        flops = 2 * 2 * b * cap * hq * d
+        tpu = max(flops / chip.peak_flops_bf16, io / chip.hbm_bw)
+        rows.append((f"kernels/flash_decode/cap{cap}", cpu * 1e6,
+                     f"tpu_roofline_us={tpu*1e6:.0f},"
+                     f"intensity={flops/io:.1f}"))
+
+    # ssd scan
+    for (b, s, h, p, n, chunk) in [(2, 2048, 32, 64, 128, 128)]:
+        ks = jax.random.split(rng, 6)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a_log = jax.random.normal(ks[2], (h,)) * 0.5
+        bm = jax.random.normal(ks[3], (b, s, n))
+        cm = jax.random.normal(ks[4], (b, s, n))
+        dvec = jax.random.normal(ks[5], (h,))
+        fn = jax.jit(lambda *a: ref.ssd_ref(*a, chunk=chunk))
+        cpu = _t(fn, x, dt, a_log, bm, cm, dvec)
+        flops = b * s * h * (2 * chunk * (n + p) + 4 * p * n)
+        io = b * s * h * p * 2 * 2 + b * s * n * 2 * 2
+        tpu = max(flops / chip.peak_flops_bf16, io / chip.hbm_bw)
+        rows.append((f"kernels/ssd/s{s}h{h}", cpu * 1e6,
+                     f"tpu_roofline_us={tpu*1e6:.0f},"
+                     f"intensity={flops/io:.0f}"))
+
+    # rg-lru scan
+    for (b, s, w) in [(2, 2048, 4096)]:
+        ks = jax.random.split(rng, 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w)))
+        bx = jax.random.normal(ks[1], (b, s, w))
+        fn = jax.jit(lambda a, bx: ref.rglru_scan_ref(a, bx)[0])
+        cpu = _t(fn, a, bx)
+        io = 3 * b * s * w * 2
+        flops = 3 * b * s * w  # elementwise madd per scan level amortized
+        tpu = io / chip.hbm_bw  # bandwidth-bound
+        rows.append((f"kernels/rglru/s{s}w{w}", cpu * 1e6,
+                     f"tpu_roofline_us={tpu*1e6:.0f},bound=memory"))
+    return rows

@@ -1,0 +1,37 @@
+"""§Roofline table: read the dry-run artifacts and emit one row per
+(arch x shape x mesh) cell with the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio and roofline fraction."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run():
+    rows = []
+    if not ARTIFACTS.exists():
+        return [("roofline/NOT_GENERATED", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        cell = d["cell"]
+        name = f"roofline/{cell['arch']}/{cell['shape']}/" \
+               f"{'pod2' if cell['multi_pod'] else 'pod1'}"
+        if d.get("skipped"):
+            rows.append((name, 0.0, f"SKIP:{d['why'][:40]}"))
+            continue
+        r = d["roofline"]
+        mem_gib = d["memory"]["peak_per_device"] / 2**30
+        rows.append((
+            name, r[max("compute_s memory_s collective_s".split(),
+                        key=lambda k: r[k])] * 1e6,
+            f"dom={r['dominant']},comp_ms={r['compute_s']*1e3:.1f},"
+            f"mem_ms={r['memory_s']*1e3:.1f},"
+            f"coll_ms={r['collective_s']*1e3:.1f},"
+            f"useful={r['useful_flops_ratio']:.2f},"
+            f"roofline_frac={r['roofline_fraction']:.3f},"
+            f"mem_gib={mem_gib:.1f}"))
+    return rows

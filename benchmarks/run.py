@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig15,...] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV.  Simulator-based figures run the
+paper's cluster/model scale on the analytic estimator; estimator accuracy
+(fig12) and kernels measure real wall time on this host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7,fig8,table6,fig12,fig13,fig14,"
+                         "fig15,fig16,fig17,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer MCMC iterations (CI-friendly)")
+    args = ap.parse_args()
+
+    from benchmarks import estimator_acc, kernels_bench, paper_figs, roofline_table
+    it = 150 if args.fast else 600
+
+    benches = {
+        "fig7": lambda: paper_figs.fig7_weak_scaling(iters=it),
+        "fig8": lambda: paper_figs.fig8_context_scaling(iters=it),
+        "table6": lambda: paper_figs.table6_breakdown(iters=2 * it),
+        "fig12": estimator_acc.run,
+        "fig13": paper_figs.fig13_search_progress,
+        "fig14": paper_figs.fig14_pruning,
+        "fig15": paper_figs.fig15_optimality,
+        "fig16": lambda: paper_figs.fig16_algorithms(iters=it),
+        "fig17": lambda: paper_figs.fig17_strong_scaling(iters=max(it // 2, 100)),
+        "kernels": kernels_bench.run,
+        "roofline": roofline_table.run,
+    }
+    only = args.only.split(",") if args.only else list(benches)
+
+    print("name,us_per_call,derived")
+    for name in only:
+        t0 = time.time()
+        try:
+            rows = benches[name]()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for r, us, derived in rows:
+            print(f"{r},{us:.1f},{derived}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Execution-plan search showcase: reproduce the paper's 7B+7B / 70B+7B plan
+tables (Tables 2-5) in the simulator and print searched vs. heuristic plans
+with their estimated iteration times.
+
+    PYTHONPATH=src python examples/plan_search.py [--model 7b|70b] [--gpus 16]
+"""
+
+import argparse
+import time
+
+from repro import hw
+from repro.configs.llama import PAPER_SIZES, critic_of, LLAMA_7B
+from repro.core.dfg import build_ppo
+from repro.core.estimator import CostModel
+from repro.core.plan import Cluster
+from repro.core.search import heuristic_plan, mcmc_search
+from repro.core.simulator import max_mem_per_device, simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="7b", choices=list(PAPER_SIZES))
+    ap.add_argument("--gpus", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=2000)
+    ap.add_argument("--ctx", type=int, default=2048)
+    args = ap.parse_args()
+
+    actor = PAPER_SIZES[args.model]
+    critic = critic_of(LLAMA_7B)
+    cluster = Cluster(n_nodes=args.gpus // 8, devs_per_node=8, chip=hw.H100,
+                      intra_node_bw=450e9, inter_node_bw=50e9)
+    dfg = build_ppo(actor, critic, batch=512, prompt_len=args.ctx // 2,
+                    gen_len=args.ctx // 2, n_minibatches=8)
+    cost = CostModel(cluster)
+
+    hp = heuristic_plan(dfg, cluster, cost)
+    sim_h = simulate(dfg, hp, cost)
+    print(f"REAL-Heuristic ({args.model} actor, {args.gpus} GPUs): "
+          f"{sim_h.total_time:.1f}s/iter, "
+          f"mem {max_mem_per_device(dfg, hp, cost)/2**30:.0f} GiB/dev")
+    print(hp)
+
+    t0 = time.time()
+    res = mcmc_search(dfg, cluster, cost, iters=args.iters, seed=0)
+    sim_b = simulate(dfg, res.best_plan, cost)
+    print(f"\nREAL searched ({time.time()-t0:.0f}s search, "
+          f"{res.evals} plans evaluated, space ~{res.space_size:.1e}): "
+          f"{res.best_time:.1f}s/iter  -> {sim_h.total_time/res.best_time:.2f}x")
+    print(res.best_plan)
+    print("\ntimeline:")
+    for name, s, e in sim_b.timeline():
+        bar = "#" * max(1, int(40 * (e - s) / sim_b.total_time))
+        print(f"  {name:34s} {s:7.2f} -> {e:7.2f}  {bar}")
+    print(f"\nrealloc total: {sim_b.realloc_time:.2f}s  "
+          f"data xfer: {sim_b.xfer_time:.3f}s "
+          f"(paper Fig. 11: both minor vs. compute)")
+
+
+if __name__ == "__main__":
+    main()

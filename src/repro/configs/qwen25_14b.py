@@ -1,0 +1,18 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-*]: GQA with QKV bias."""
+
+from repro.configs.base import ModelConfig, dense_pattern
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    num_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    **dense_pattern(48),
+)

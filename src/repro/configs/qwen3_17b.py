@@ -1,0 +1,19 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-*]: GQA + qk-norm, no bias."""
+
+from repro.configs.base import ModelConfig, dense_pattern
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    num_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    **dense_pattern(28),
+)

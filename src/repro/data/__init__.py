@@ -1,0 +1,1 @@
+"""Synthetic data pipelines (paper Appendix A protocol)."""

@@ -1,0 +1,109 @@
+"""Flash-decode: single-token attention over a (ring or linear) KV cache as a
+Pallas TPU kernel.
+
+One grid instance handles a whole GQA group — q is reshaped to
+(B, Hkv, G, D) so the (G x block_k) score tile feeds the MXU with all query
+heads of the group at once (G is small; the sublane dim pads to 8).  The KV
+cache streams through VMEM in (block_k x D) tiles along the innermost
+"arbitrary" grid axis with online-softmax scratch carry, and ``cache_len``
+masks unwritten slots — ring caches (window attention) are handled by the
+same bound since every resident slot is in-window by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -2.0**30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k, n_k, cap):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    limit = jnp.minimum(len_ref[0, 0], cap)
+    k_start = ik * block_k
+
+    @pl.when(k_start < limit)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)      # (g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < limit, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[:, 0] = l_scr[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, *, cache_len, window=None, block_k=256,
+                 interpret=False):
+    """q: (B, Hq, D); caches: (B, C, Hkv, D); cache_len: (B,) int32.
+    Returns (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, cap, hkv, _ = k_cache.shape
+    g = hq // hkv
+    block_k = min(block_k, cap)
+    pad = (-cap) % block_k
+    if pad:  # non-aligned caches: pad (masked by ``limit``); production
+        # cache capacities are block-aligned so this is normally a no-op
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_k = pl.cdiv(cap, block_k)
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+    # ring caches (window attention): every resident slot is valid
+    eff_cap = cap if window is None else min(cap, window)
+
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               n_k=n_k, cap=eff_cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, h, ik: (bb, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, ik: (bb, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bb, h, ik: (bb, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bb, h, ik: (bb, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, h, ik: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qg, k_cache, v_cache)
+    return out.reshape(b, hq, d)

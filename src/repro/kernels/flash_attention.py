@@ -1,0 +1,139 @@
+"""Flash attention (GQA, causal / sliding-window) as a Pallas TPU kernel.
+
+TPU-native adaptation (see DESIGN.md §2): online-softmax accumulation over KV
+blocks mapped onto the Mosaic grid — the KV dimension is the innermost
+("arbitrary") grid axis carrying running (m, l, acc) in VMEM scratch; Q/K/V
+stream HBM->VMEM in (block_q x head_dim) / (block_k x head_dim) tiles aligned
+to the 128-lane MXU.  Fully-masked KV blocks are skipped via @pl.when, which
+makes causal and sliding-window attention O(S·W) rather than O(S²) in both
+FLOPs and HBM traffic.
+
+Restriction vs. the jnp oracle: positions must be the standard arange (the
+training/prefill case).  ``ops.mha`` falls back to the oracle otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -2.0**30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, n_k, causal, window, seq_q, seq_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip: any (q, k) pair in range?
+    live = True
+    if causal:
+        live = jnp.asarray(q_start + block_q - 1 >= k_start)
+    if window is not None:
+        live = jnp.logical_and(
+            live, q_start <= k_start + block_k - 1 + window - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_scr[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_cur[:, None], l_scr.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_mha(q, k, v, *, causal=True, window=None, q_positions=None,
+              kv_positions=None, block_q=128, block_k=128, interpret=False):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D).  Returns (B, Sq, Hq, D)."""
+    del q_positions, kv_positions  # kernel assumes arange positions
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    if pad_q:  # non-aligned shapes: pad (padded keys are masked, padded
+        # query rows are sliced off); production shapes are aligned
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    n_q = pl.cdiv(sq + pad_q, block_q)
+    n_k = pl.cdiv(skv + pad_k, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, hq, n_q, n_k)
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k, n_k=n_k,
+        causal=causal, window=window, seq_q=sq, seq_k=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bb, h, iq, ik: (bb, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bb, h, iq, ik, g=g: (bb, ik, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bb, h, iq, ik, g=g: (bb, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bb, h, iq, ik: (bb, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq + pad_q, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq] if pad_q else out

@@ -1,0 +1,75 @@
+"""Dispatch layer over the Pallas kernels and their jnp oracles.
+
+``impl`` selects the execution path:
+  - "reference":         pure-jnp oracle (CPU tests, dry-run lowering)
+  - "pallas":            Mosaic TPU kernel (target hardware)
+  - "pallas_interpret":  Pallas interpret mode (CPU validation of kernel bodies)
+
+Models take ``impl`` from their runtime context so the same model code lowers
+for TPU with kernels and compiles on CPU with references.  These functions are
+meant to be called from inside an enclosing ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+from repro.kernels import ref
+
+# "stub" short-circuits attention (returns q): used by the dry-run's
+# attention-traffic probe to isolate how much of a superblock's HBM bytes the
+# naive reference attention costs (= what the Pallas flash kernel eliminates).
+IMPLS = ("reference", "pallas", "pallas_interpret", "stub")
+
+
+def _check(impl):
+    if impl not in IMPLS:
+        raise ValueError(f"impl={impl!r} not in {IMPLS}")
+
+
+def mha(q, k, v, *, causal=True, window=None, q_positions=None,
+        kv_positions=None, impl="reference"):
+    _check(impl)
+    if impl == "stub":
+        return q + 0.0 * (k.sum() + v.sum())
+    if impl == "reference":
+        return ref.mha_ref(q, k, v, causal=causal, window=window,
+                           q_positions=q_positions, kv_positions=kv_positions)
+    from repro.kernels import flash_attention
+    return flash_attention.flash_mha(
+        q, k, v, causal=causal, window=window, q_positions=q_positions,
+        kv_positions=kv_positions, interpret=(impl == "pallas_interpret"))
+
+
+def decode_mha(q, k_cache, v_cache, *, cache_len, window=None, impl="reference"):
+    _check(impl)
+    if impl == "reference":
+        return ref.decode_mha_ref(q, k_cache, v_cache, cache_len=cache_len,
+                                  window=window)
+    from repro.kernels import decode_attention
+    return decode_attention.flash_decode(
+        q, k_cache, v_cache, cache_len=cache_len, window=window,
+        interpret=(impl == "pallas_interpret"))
+
+
+def ssd(x, dt, a_log, b_mat, c_mat, d_vec, *, chunk, init_state=None,
+        return_state=False, impl="reference"):
+    _check(impl)
+    if impl == "reference":
+        return ref.ssd_ref(x, dt, a_log, b_mat, c_mat, d_vec, chunk=chunk,
+                           init_state=init_state, return_state=return_state)
+    from repro.kernels import ssd_scan
+    return ssd_scan.ssd_pallas(
+        x, dt, a_log, b_mat, c_mat, d_vec, chunk=chunk, init_state=init_state,
+        return_state=return_state, interpret=(impl == "pallas_interpret"))
+
+
+def ssd_decode(x, dt, a_log, b_vec, c_vec, d_vec, state):
+    return ref.ssd_decode_ref(x, dt, a_log, b_vec, c_vec, d_vec, state)
+
+
+def rglru_scan(a, bx, init_state=None, *, impl="reference"):
+    _check(impl)
+    if impl == "reference":
+        return ref.rglru_scan_ref(a, bx, init_state)
+    from repro.kernels import rglru_scan as krn
+    return krn.rglru_pallas(a, bx, init_state,
+                            interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,213 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth used (a) by tests to validate the Pallas kernels in
+interpret mode, (b) as the execution path on non-TPU backends (this container,
+and the multi-pod dry-run, which only lowers/compiles).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30  # large-but-finite; avoids NaN from all-masked rows
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / bidirectional)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+            q_positions=None, kv_positions=None, logits_dtype=jnp.float32,
+            q_chunk: int | None = 0):
+    """Multi-head attention with grouped KV heads.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``window``: sliding-window size (keys with q_pos - k_pos >= window masked).
+    Positions default to arange; pass explicitly for decode / ring caches.
+
+    ``q_chunk``: statically unroll over query chunks so the score working set
+    is (B, H, q_chunk, Skv) instead of (B, H, Sq, Skv) — exact math, bounded
+    memory, and no extra ``while`` loop (keeps HLO cost accounting simple).
+    0 = auto (chunk long sequences); None = never chunk.
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    if q_positions is None:
+        q_positions = jnp.arange(sq)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)[None, :]
+
+    if q_chunk == 0:
+        q_chunk = 256
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0 and sq == skv:
+        outs = []
+        for i in range(sq // q_chunk):
+            lo, hi = i * q_chunk, (i + 1) * q_chunk
+            klo = 0
+            if causal and kv_positions.shape[0] == 1:
+                # keys after this chunk's last query are fully masked; with a
+                # window, keys before (first query - window + 1) are too
+                khi = hi
+                if window is not None:
+                    klo = max(0, lo - window + 1)
+            else:
+                khi = skv
+            outs.append(mha_ref(
+                q[:, lo:hi], k[:, klo:khi], v[:, klo:khi], causal=causal,
+                window=window, q_positions=q_positions[:, lo:hi],
+                kv_positions=kv_positions[:, klo:khi],
+                logits_dtype=logits_dtype, q_chunk=None))
+        return jnp.concatenate(outs, axis=1)
+
+    qr = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k).astype(logits_dtype)
+    logits = logits / jnp.sqrt(d).astype(logits_dtype)
+
+    dq = q_positions[:, None, None, :, None]  # (b,1,1,sq,1)
+    dk = kv_positions[:, None, None, None, :]  # (b,1,1,1,skv)
+    mask = jnp.ones((b, 1, 1, sq, skv), dtype=bool)
+    if causal:
+        mask &= dk <= dq
+    if window is not None:
+        mask &= (dq - dk) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)
+
+
+def decode_mha_ref(q, k_cache, v_cache, *, cache_len, window: int | None = None):
+    """Single-token decode attention over a (ring or linear) KV cache.
+
+    q: (B, Hq, D).  k_cache/v_cache: (B, C, Hkv, D) where C is the cache
+    capacity.  ``cache_len``: (B,) number of tokens written so far (the new
+    token's position).  For a ring cache (C == window) all slots are valid
+    once cache_len >= C.  Returns (B, Hq, D).
+    """
+    b, c, hkv, d = k_cache.shape
+    hq = q.shape[1]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    slots = jnp.arange(c)[None, :]  # (1, C)
+    n = cache_len[:, None]  # (B, 1)
+    valid = slots < jnp.minimum(n, c)
+    if window is not None:
+        # ring cache: every stored slot is within the window by construction
+        valid = slots < jnp.minimum(n, min(c, window))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality), chunked
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L) lower-triangular inclusive segment sums:
+    out[i, j] = sum_{k=j+1..i} x[k] for i >= j, -inf above the diagonal."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, d_vec, *, chunk: int, init_state=None,
+            return_state: bool = False):
+    """Chunked SSD forward (Mamba-2, ngroups=1).
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus-ed, > 0);
+    a_log: (H,) (A = -exp(a_log)); b_mat, c_mat: (B, S, N); d_vec: (H,).
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t + D x_t
+    Returns y (B,S,H,P) and optionally the final state (B,H,P,N).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, cl = s // chunk, chunk
+    f32 = jnp.float32
+
+    dA = (dt.astype(f32) * (-jnp.exp(a_log.astype(f32)))[None, None, :])  # (B,S,H) log-decay
+    xr = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(bsz, nc, cl, h, p)
+    xo = x.astype(f32).reshape(bsz, nc, cl, h, p)
+    dA = dA.reshape(bsz, nc, cl, h)
+    br = b_mat.astype(f32).reshape(bsz, nc, cl, n)
+    cr = c_mat.astype(f32).reshape(bsz, nc, cl, n)
+
+    cums = jnp.cumsum(dA, axis=2)  # inclusive (B,NC,CL,H)
+    # Intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B,NC,H,CL,CL)
+    scores = jnp.einsum("bcln,bcmn->bclm", cr, br)  # (B,NC,CL,CL)
+    y_diag = jnp.einsum("bclm,bchlm,bcmhp->bclhp", scores, L, xr)
+
+    # Per-chunk outgoing states
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,NC,CL,H)
+    s_local = jnp.einsum("bcln,bclh,bclhp->bchpn", br, decay_to_end, xr)
+
+    # Inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (B,NC,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), f32)
+    else:
+        init_state = init_state.astype(f32)
+
+    def step(carry, inp):
+        dec, sl = inp  # (B,H), (B,H,P,N)
+        new = carry * dec[..., None, None] + sl
+        return new, carry  # emit the state PRIOR to this chunk
+
+    final_state, s_prev = jax.lax.scan(
+        step, init_state,
+        (chunk_decay.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cr, s_prev, jnp.exp(cums))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + d_vec.astype(f32)[None, None, :, None] * x.astype(f32)
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_ref(x, dt, a_log, b_vec, c_vec, d_vec, state):
+    """One decode step.  x: (B,H,P); dt: (B,H); b_vec,c_vec: (B,N);
+    state: (B,H,P,N).  Returns (y, new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * (-jnp.exp(a_log.astype(f32)))[None, :])  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(f32) * dt.astype(f32)[..., None],
+                     b_vec.astype(f32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_vec.astype(f32))
+    y = y + d_vec.astype(f32)[None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) linear recurrence
+# ---------------------------------------------------------------------------
+
+def rglru_scan_ref(a, bx, init_state=None):
+    """h_t = a_t * h_{t-1} + bx_t, computed with an associative scan.
+
+    a, bx: (B, S, W) with a in (0, 1].  Returns (h, final_state)."""
+    f32 = jnp.float32
+    a32, b32 = a.astype(f32), bx.astype(f32)
+    if init_state is not None:
+        b32 = b32.at[:, 0].add(a32[:, 0] * init_state.astype(f32))
+
+    def combine(x, y):
+        ax, bxx = x
+        ay, byy = y
+        return ax * ay, ay * bxx + byy
+
+    ha, hb = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return hb.astype(bx.dtype), hb[:, -1]

@@ -1,0 +1,1 @@
+"""Mesh construction, dry-run, roofline analysis, cluster launcher."""

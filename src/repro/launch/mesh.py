@@ -1,0 +1,42 @@
+"""Production mesh construction.  A FUNCTION (not a module constant) so that
+importing this module never touches jax device state — only dryrun.py (which
+sets XLA_FLAGS first) materializes the 512-device meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_devices: int | None = None, axes=("data", "model")):
+    """Small mesh over however many local devices exist (CPU tests)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if len(axes) == 2:
+        d = 1
+        for cand in range(int(n ** 0.5), 0, -1):
+            if n % cand == 0:
+                d = cand
+                break
+        shape = (n // d, d)
+    else:
+        shape = (n,)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def submesh(devices, shape, axis_names):
+    """A Mesh over an explicit device subset (realizes a ReaL DeviceMesh +
+    ParallelStrategy as a jax mesh for one function call)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    arr = np.asarray(devices).reshape(shape)
+    return Mesh(arr, axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))

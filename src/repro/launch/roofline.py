@@ -1,0 +1,249 @@
+"""Roofline analysis of compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all per-device / per-chip:
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes / HBM_bw
+  collective = ring-model wire-bytes of every HLO collective / link_bw
+
+XLA facts this module is built around (verified in-container, see DESIGN.md):
+  * ``compiled.cost_analysis()`` is per-device and counts while (scan) bodies
+    ONCE -> we re-multiply using trip counts parsed from loop conditions, with
+    per-body flops/bytes measured by compiling single-superblock "probe"
+    functions under the same shardings.
+  * collective ops are parsed from HLO text; ops inside while bodies are
+    multiplied by that loop's trip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro import hw
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_RE = r"(f64|f32|f16|bf16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+_SHAPE_RE = re.compile(_DTYPE_RE + r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum byte sizes of every tensor literal in an HLO type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * hw.dtype_bytes(dt)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    wire_bytes_by_kind: dict
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its body lines.  Headers may have nested-tuple
+    parameter types, so the param list cannot be matched with [^)]*."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if m and "->" in line and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_info(hlo: str, comps: dict[str, list[str]]):
+    """List of (body_name, cond_name, trip_count_or_None)."""
+    out = []
+    for line in hlo.splitlines():
+        if " while(" not in line and "while(" not in line.strip():
+            continue
+        b = re.search(r"body=%?([\w\.\-]+)", line)
+        c = re.search(r"condition=%?([\w\.\-]+)", line)
+        if not b or not c:
+            continue
+        trip = None
+        cond_lines = comps.get(c.group(1), [])
+        for cl in cond_lines:
+            m = re.search(r"compare\(.*\)", cl)
+            if m and ("LT" in cl or "direction=LT" in cl):
+                k = re.search(r"constant\((\d+)\)", cl)
+                if k:
+                    trip = int(k.group(1))
+        if trip is None:  # constant may be declared on its own line
+            for cl in cond_lines:
+                k = re.search(r"=\s*\w+\[\]\s*constant\((\d+)\)", cl)
+                if k:
+                    trip = int(k.group(1))
+        out.append((b.group(1), c.group(1), trip))
+    return out
+
+
+def _reachable(comps: dict[str, list[str]], root: str) -> set[str]:
+    """Computations transitively called from ``root`` (calls, fusions, loops)."""
+    seen, stack = set(), [root]
+    while stack:
+        cur = stack.pop()
+        if cur in seen or cur not in comps:
+            continue
+        seen.add(cur)
+        for line in comps[cur]:
+            for m in re.finditer(
+                    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)%?([\w\.\-]+)",
+                    line):
+                stack.append(m.group(1))
+    return seen
+
+
+def parse_collectives(hlo: str, default_trip: int | None = None
+                      ) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    whiles = _while_info(hlo, comps)
+    # multiplier per computation: product of trip counts of enclosing loops
+    mult: dict[str, float] = {name: 1.0 for name in comps}
+    for body, cond, trip in whiles:
+        t = trip if trip is not None else (default_trip or 1)
+        for c in _reachable(comps, body):
+            mult[c] = mult.get(c, 1.0) * t
+
+    counts: dict[str, float] = {}
+    bytes_by: dict[str, float] = {}
+    wire_by: dict[str, float] = {}
+    op_re = re.compile(
+        r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            if "-done(" in line:
+                continue  # async pair: counted at the -start op
+            om = op_re.search(line)
+            if not om:
+                continue
+            kind = om.group(2)
+            # payload = largest tensor in the op line: equals the FULL array
+            # for AG (result) / RS (input) / AR / CP (either side)
+            nbytes = max((_shape_bytes(om.group(1)),
+                          _largest_tensor(line)), default=0.0)
+            k = _group_size(line)
+            counts[kind] = counts.get(kind, 0) + m
+            bytes_by[kind] = bytes_by.get(kind, 0.0) + nbytes * m
+            wire = _wire_bytes(kind, nbytes, k)
+            wire_by[kind] = wire_by.get(kind, 0.0) + wire * m
+    return CollectiveStats(counts, bytes_by, wire_by)
+
+
+def _largest_tensor(line: str) -> float:
+    best = 0.0
+    for m in _SHAPE_RE.finditer(line):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        best = max(best, n * hw.dtype_bytes(dt))
+    return best
+
+
+def _group_size(line: str) -> int:
+    g = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if g:
+        return len(g.group(1).split(","))
+    g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if g2:
+        return int(g2.group(2))
+    return 1
+
+
+def _wire_bytes(kind: str, nbytes: float, k: int) -> float:
+    """Per-device wire bytes under ring algorithms.  ``nbytes`` is the FULL
+    (unsharded) payload of the collective."""
+    if k <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return hw.all_reduce_bytes(nbytes, k)
+    if kind in ("all-gather", "reduce-scatter"):
+        return hw.all_gather_bytes(nbytes, k)
+    if kind == "all-to-all":
+        return nbytes * (k - 1) / k
+    return nbytes  # collective-permute: every byte crosses a link once
+
+
+# ------------------------------------------------------------------ terms
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float            # per-device, trip-corrected
+    hbm_bytes: float        # per-device, trip-corrected
+    wire_bytes: float       # per-device collective wire traffic
+    chip: hw.ChipSpec
+    model_flops_total: float = 0.0
+    n_chips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.chip.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.chip.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / self.chip.ici_link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_total = self.flops * self.n_chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step achieves if it runs at the
+        dominant-term time: useful_compute_time / bound_time."""
+        useful_s = (self.model_flops_total / self.n_chips
+                    / self.chip.peak_flops_bf16)
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape_kind: str, batch: int, seq_len: int) -> float:
+    """MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for fwd-only; decode
+    D = batch tokens (one step)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * batch * seq_len
+    if shape_kind == "prefill":
+        return 2.0 * n * batch * seq_len
+    return 2.0 * n * batch  # decode: one token per sequence

@@ -1,0 +1,92 @@
+"""Batched serving launcher: the generation-side runtime that backs the
+actor-generation function call, exposed standalone.
+
+Requests are grouped into shape buckets (prompt length rounded up to a
+power of two) so each bucket reuses one compiled prefill+decode program —
+the TPU analogue of the paper's CUDAGraph decode: no per-token dispatch,
+one executable per bucket.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --requests 12 --new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def bucket_of(length: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    return buckets[-1]
+
+
+class BatchServer:
+    """Minimal bucketed batch server over the functional model API."""
+
+    def __init__(self, cfg, params, max_new: int, pad_id: int = 0):
+        import jax
+        from repro.models import generate
+        self.cfg, self.params, self.max_new = cfg, params, max_new
+        self.pad_id = pad_id
+        self._gen = jax.jit(
+            lambda p, b, k: generate(p, cfg, b, num_new_tokens=max_new,
+                                     rng=k),
+            static_argnames=())
+        self._compiled_buckets = set()
+
+    def serve(self, prompts, rng):
+        """prompts: list of 1-D int32 arrays (ragged).  Returns a list of
+        generated-token arrays, preserving order."""
+        import jax.numpy as jnp
+        by_bucket: dict[int, list[int]] = {}
+        for i, pr in enumerate(prompts):
+            by_bucket.setdefault(bucket_of(len(pr)), []).append(i)
+        results = [None] * len(prompts)
+        for bucket, idxs in sorted(by_bucket.items()):
+            toks = jnp.full((len(idxs), bucket), self.pad_id, jnp.int32)
+            for row, i in enumerate(idxs):
+                pr = prompts[i]
+                toks = toks.at[row, bucket - len(pr):].set(pr)  # left-pad
+            out = self._gen(self.params, {"tokens": toks}, rng)
+            self._compiled_buckets.add((len(idxs), bucket))
+            for row, i in enumerate(idxs):
+                results[i] = out["tokens"][row]
+        return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.configs import ARCHS
+    from repro.models import init_params
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = cfg.reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchServer(cfg, params, max_new=args.new)
+
+    rng = np.random.default_rng(0)
+    prompts = [np.asarray(rng.integers(1, cfg.vocab_size, rng.integers(4, 40)),
+                          np.int32) for _ in range(args.requests)]
+    t0 = time.time()
+    out = server.serve(prompts, jax.random.PRNGKey(1))
+    dt = time.time() - t0
+    toks = sum(len(o) for o in out)
+    print(f"served {len(prompts)} ragged requests in {dt:.1f}s "
+          f"({toks} new tokens, buckets={sorted(server._compiled_buckets)})")
+    print("first output:", out[0][:8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Cluster launcher: search an execution plan and run RLHF training.
+
+Single-host entry point (this container); on a real fleet each host runs the
+same command under its own process index and ``jax.distributed.initialize()``
+stitches the global device mesh — the plan/search/runtime layers are
+device-count agnostic.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --algo ppo --steps 5 [--nodes 2 --devs-per-node 8]
+    PYTHONPATH=src python -m repro.launch.train --plan-only --arch llama-7b \
+        --nodes 2 --devs-per-node 8 --h100
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--algo", default="ppo", choices=["ppo"])
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--devs-per-node", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--h100", action="store_true",
+                    help="cost-model the paper's H100 cluster")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="search + print the plan, do not execute")
+    ap.add_argument("--search-iters", type=int, default=500)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: call jax.distributed.initialize()")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+
+    import jax
+    from repro import hw
+    from repro.configs import ARCHS
+    from repro.core.plan import Cluster
+    from repro.rlhf.experiment import ExperimentConfig, RLHFExperiment
+    from repro.rlhf.ppo import PPOHyperparameters
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = cfg.reduced()
+    kw = {}
+    if args.h100:
+        kw = dict(chip=hw.H100, intra_node_bw=450e9, inter_node_bw=50e9)
+    cluster = Cluster(n_nodes=args.nodes, devs_per_node=args.devs_per_node,
+                      **kw)
+    exp_cfg = ExperimentConfig(
+        batch=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len,
+        search_iters=args.search_iters,
+        ppo=PPOHyperparameters(n_minibatches=min(2, args.batch)))
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"cluster={args.nodes}x{args.devs_per_node}")
+    exp = RLHFExperiment(cfg, cfg, cluster, exp_cfg)
+    print(exp.plan)
+    if args.plan_only:
+        return
+
+    mgr = None
+    if args.ckpt:
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(args.ckpt)
+
+    for step in range(args.steps):
+        t0 = time.time()
+        out = exp.run_iteration(jax.random.PRNGKey(step))
+        print(f"step {step}: {time.time()-t0:.1f}s "
+              f"actor_loss={out['actor_stats']['loss']:+.4f} "
+              f"reward={float(out['rewards'].mean()):+.3f}", flush=True)
+        if mgr and (step + 1) % 5 == 0:
+            mgr.save_async(step + 1, {
+                "actor": exp.models["actor"].params,
+                "critic": exp.models["critic"].params})
+    if mgr:
+        mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

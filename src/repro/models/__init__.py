@@ -1,0 +1,8 @@
+from repro.models.model import (decode_step, forward, generate, init_params,
+                                input_specs, lm_loss, logits_of, prefill,
+                                synth_batch, values_of)
+
+__all__ = [
+    "decode_step", "forward", "generate", "init_params", "input_specs",
+    "lm_loss", "logits_of", "prefill", "synth_batch", "values_of",
+]

@@ -1,0 +1,137 @@
+"""GQA attention layer (qk-norm, QKV-bias, RoPE, sliding window) + KV caches.
+
+The cache is a dict so the whole model state remains a plain pytree:
+  full   : k/v of shape (B, S_max, Hkv, Dh), linear writes at position t
+  window : k/v of shape (B, W, Hkv, Dh), ring-buffer writes at t % W
+RoPE is applied before caching, so ring-buffer slot order is irrelevant
+(attention is set-wise given positions are baked into k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, dt, cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt, cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt, cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = L.rmsnorm_init(cfg.head_dim, dt)
+        p["k_norm"] = L.rmsnorm_init(cfg.head_dim, dt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, xq, xkv, positions_q, positions_kv,
+                 use_rope: bool):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    q = L.dense_apply(p["wq"], xq).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    k = L.dense_apply(p["wk"], xkv).reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense_apply(p["wv"], xkv).reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    if "q_norm" in p:
+        q = L.rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = L.rope_apply(q, positions_q, cfg.rope_theta)
+        k = L.rope_apply(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+               causal=True, impl="reference"):
+    """Full-sequence attention (training / prefill without cache)."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
+    out = ops.mha(q, k, v, causal=causal, window=spec.window,
+                  q_positions=positions, kv_positions=positions, impl=impl)
+    return L.dense_apply(p["wo"], out.reshape(*x.shape[:2], cfg.q_dim))
+
+
+def attn_apply_with_kv(p, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+                       causal=True, impl="reference"):
+    """Like attn_apply but also returns the roped k/v (for prefill caching)."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
+    out = ops.mha(q, k, v, causal=causal, window=spec.window,
+                  q_positions=positions, kv_positions=positions, impl=impl)
+    y = L.dense_apply(p["wo"], out.reshape(*x.shape[:2], cfg.q_dim))
+    return y, {"k": k, "v": v}
+
+
+def cross_attn_apply(p, cfg: ModelConfig, x, enc_out=None, enc_kv=None,
+                     impl="reference"):
+    """Decoder cross-attention.  Computes K/V from ``enc_out`` or reuses a
+    prefill-cached ``enc_kv`` (decode path)."""
+    b, sq, _ = x.shape
+    q = L.dense_apply(p["wq"], x).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    if enc_kv is None:
+        enc_kv = encode_cross_kv(p, cfg, enc_out)
+    out = ops.mha(q, enc_kv["k"], enc_kv["v"], causal=False, window=None,
+                  impl=impl)
+    return L.dense_apply(p["wo"], out.reshape(b, sq, cfg.q_dim))
+
+
+def encode_cross_kv(p, cfg: ModelConfig, enc_out):
+    b, skv, _ = enc_out.shape
+    k = L.dense_apply(p["wk"], enc_out).reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense_apply(p["wv"], enc_out).reshape(b, skv, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}
+
+
+# ------------------------------------------------------------------ KV cache
+
+def cache_init(cfg: ModelConfig, spec: LayerSpec, batch, max_len, dtype):
+    cap = min(spec.window, max_len) if spec.window else max_len
+    shape = (batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec(cfg: ModelConfig, spec: LayerSpec, batch, max_len, dtype):
+    cap = min(spec.window, max_len) if spec.window else max_len
+    sh = jax.ShapeDtypeStruct((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return {"k": sh, "v": sh}
+
+
+def prefill_into_cache(cache, spec: LayerSpec, k, v, seq_len: int):
+    """Write a full prefill's roped k/v into the cache (ring for window)."""
+    cap = cache["k"].shape[1]
+    if seq_len <= cap:
+        k_w, v_w, slots = k, v, jnp.arange(seq_len) % cap
+    else:
+        k_w, v_w = k[:, -cap:], v[:, -cap:]
+        slots = (jnp.arange(seq_len - cap, seq_len)) % cap
+    return {
+        "k": cache["k"].at[:, slots].set(k_w.astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, slots].set(v_w.astype(cache["v"].dtype)),
+    }
+
+
+def attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache, t, *,
+                      impl="reference"):
+    """One-token decode.  x: (B, 1, D); t: scalar int32 position.
+    Returns (y, new_cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), t, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
+    cap = cache["k"].shape[1]
+    slot = (t % cap) if spec.window else t
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+    }
+    cache_len = jnp.full((b,), t + 1, dtype=jnp.int32)
+    out = ops.decode_mha(q[:, 0], new_cache["k"], new_cache["v"],
+                         cache_len=cache_len, window=spec.window, impl=impl)
+    y = L.dense_apply(p["wo"], out.reshape(b, 1, cfg.q_dim).astype(x.dtype))
+    return y, new_cache

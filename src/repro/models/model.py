@@ -1,0 +1,212 @@
+"""Model facade: init / train-forward / prefill / decode / generate for every
+architecture family, plus ``input_specs`` (ShapeDtypeStruct stand-ins) for the
+dry-run.
+
+Conventions
+-----------
+* decoder-only:  batch = {"tokens": (B,S) int32, "labels": (B,S) int32,
+  "mask": (B,S) f32}.  [vlm] archs add {"prefix_embeds": (B,P,D)} — the
+  frontend stub — and the first P positions of tokens/labels are ignored.
+* enc-dec ([audio]): {"frames": (B,P,D)} feed the encoder; tokens drive the
+  decoder.
+* value models (RLHF critic/reward) share the trunk; ``head="value"`` swaps
+  the LM head for a scalar head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel import ctx
+
+
+# ----------------------------------------------------------------- init
+
+def init_params(key, cfg: ModelConfig, head: str = "lm"):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "embed": L.embed_init(ks[0], cfg),
+        "groups": T.stack_init(ks[1], cfg, cross=(cfg.family == "encdec")),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if head == "lm":
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt)
+    else:
+        p["value_head"] = L.dense_init(ks[2], cfg.d_model, 1, jnp.float32)
+    if cfg.family == "encdec":
+        p["encoder"] = {
+            "groups": T.stack_init(ks[3], cfg, cross=False),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        }
+    return p
+
+
+# ----------------------------------------------------------------- forward
+
+def _encode(params, cfg: ModelConfig, frames, impl):
+    pos = jnp.arange(frames.shape[1])[None, :]
+    h, _ = T.stack_apply(params["encoder"]["groups"], cfg, frames, pos,
+                         causal=False, impl=impl)
+    return L.rmsnorm_apply(params["encoder"]["final_norm"], h, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token embedding with optional [vlm] prefix splice."""
+    x = L.embed_apply(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    x = ctx.constrain(x, ctx.BATCH, None, None)
+    if cfg.prefix_len and cfg.family != "encdec":
+        pe = batch["prefix_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.prefix_len:]], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, *, impl="reference", remat=True):
+    """Full-sequence forward.  Returns (hidden (B,S,D), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    pos = jnp.arange(x.shape[1])[None, :]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"], impl)
+    h, aux = T.stack_apply(params["groups"], cfg, x, pos, causal=True,
+                           impl=impl, enc_out=enc_out, remat=remat)
+    return L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps), aux
+
+
+def logits_of(params, cfg: ModelConfig, hidden):
+    logits = L.unembed_apply(params.get("lm_head"), params["embed"], hidden,
+                             tie=cfg.tie_embeddings)
+    return ctx.constrain(logits, ctx.BATCH, None, ctx.TP)
+
+
+def values_of(params, hidden):
+    return L.dense_apply(params["value_head"],
+                         hidden.astype(jnp.float32))[..., 0]
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, impl="reference", remat=True,
+            aux_weight=0.01):
+    hidden, aux = forward(params, cfg, batch, impl=impl, remat=remat)
+    head_fn = lambda h: logits_of(params, cfg, h)
+    loss, _ = L.chunked_lm_head_loss(head_fn, hidden, batch["labels"],
+                                     batch["mask"])
+    return loss + aux_weight * aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+# ----------------------------------------------------------------- serving
+
+def prefill(params, cfg: ModelConfig, batch, max_len, *, impl="reference"):
+    """Run the prompt, fill caches, return (last_hidden (B,D), caches)."""
+    x = _embed_inputs(params, cfg, batch)
+    pos = jnp.arange(x.shape[1])[None, :]
+    enc_out = None
+    cross = cfg.family == "encdec"
+    enc_len = None
+    if cross:
+        enc_out = _encode(params, cfg, batch["frames"], impl)
+        enc_len = enc_out.shape[1]
+    caches = T.cache_init(cfg, x.shape[0], max_len, jnp.dtype(cfg.dtype),
+                          cross=cross, enc_len=enc_len)
+    h, _, caches = T.stack_prefill(params["groups"], cfg, x, pos, caches,
+                                   impl=impl, enc_out=enc_out)
+    h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    return h[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, t, *,
+                impl="reference"):
+    """token: (B,) int32; t: scalar int32 (position of this token).
+    Returns (logits (B,V) fp32, new_caches)."""
+    x = L.embed_apply(params["embed"], token[:, None]).astype(cfg.dtype)
+    cross = cfg.family == "encdec"
+    h, caches = T.stack_decode(params["groups"], cfg, x, caches, t,
+                               impl=impl, cross=cross)
+    h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_of(params, cfg, h)[:, 0]
+    return logits, caches
+
+
+def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
+             rng=None, temperature: float = 1.0, impl="reference"):
+    """Greedy/sampled autoregressive generation after a prefill.
+
+    Returns dict with tokens (B, T_new), logprobs (B, T_new), caches.
+    The decode loop is a single compiled ``lax.scan`` — the TPU analogue of
+    the paper's CUDAGraph decode (no per-token dispatch).
+    """
+    prompt_len = batch["tokens"].shape[1]
+    max_len = prompt_len + num_new_tokens
+    last_h, caches = prefill(params, cfg, batch, max_len, impl=impl)
+    logits0 = logits_of(params, cfg, last_h[:, None])[:, 0]
+
+    def sample(lg, key):
+        lg = lg / jnp.maximum(temperature, 1e-6)
+        if rng is None:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+    def logp_of(lg, tok):
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+
+    keys = (jax.random.split(rng, num_new_tokens) if rng is not None
+            else jnp.zeros((num_new_tokens, 2), jnp.uint32))
+
+    def body(carry, key):
+        logits, caches, t = carry
+        tok = sample(logits, key)
+        lp = logp_of(logits, tok)
+        new_logits, caches = decode_step(params, cfg, tok, caches, t, impl=impl)
+        return (new_logits, caches, t + 1), (tok, lp)
+
+    (_, caches, _), (toks, lps) = jax.lax.scan(
+        body, (logits0, caches, jnp.int32(prompt_len)), keys)
+    return {"tokens": toks.T, "logprobs": lps.T, "caches": caches}
+
+
+# ----------------------------------------------------------------- specs
+
+def input_specs(cfg: ModelConfig, seq_len: int, batch: int, kind: str):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((batch, seq_len), i32)
+    f = jnp.dtype(cfg.dtype)
+    specs = {"tokens": tok}
+    if kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.prefix_len, cfg.d_model), f)
+        elif cfg.prefix_len:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.prefix_len, cfg.d_model), f)
+    if kind == "train":
+        specs["labels"] = tok
+        specs["mask"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.float32)
+    return specs
+
+
+def synth_batch(rng, cfg: ModelConfig, seq_len: int, batch: int, kind="train"):
+    """Materialized synthetic batch matching input_specs (tests/examples)."""
+    ks = jax.random.split(rng, 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq_len), 0,
+                                        cfg.vocab_size, jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            ks[1], (batch, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    elif cfg.prefix_len:
+        out["prefix_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    if kind == "train":
+        out["labels"] = jax.random.randint(ks[2], (batch, seq_len), 0,
+                                           cfg.vocab_size, jnp.int32)
+        mask = jnp.ones((batch, seq_len), jnp.float32)
+        if cfg.prefix_len and cfg.family != "encdec":
+            mask = mask.at[:, :cfg.prefix_len].set(0.0)
+        out["mask"] = mask
+    return out

@@ -1,0 +1,91 @@
+"""Top-k MoE FFN with capacity-based sort dispatch (expert-parallel friendly).
+
+Dispatch is the classic sort-by-expert + capacity-drop scheme: tokens are
+argsorted by their assigned expert, scattered into an (E, C, D) buffer that is
+sharded over the expert axis (EP), run through a batched expert einsum, and
+combined back with the (renormalized) router weights.  Dropped tokens fall
+back to the residual path (plus Arctic's dense-residual MLP when configured).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    scale = d ** -0.5
+    p = {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": L.truncated_normal(ks[1], (e, d, f), dt, scale),
+        "w_in": L.truncated_normal(ks[2], (e, d, f), dt, scale),
+        "w_out": L.truncated_normal(ks[3], (e, f, d), dt, f ** -0.5),
+    }
+    if cfg.dense_residual_ffn:
+        p["dense"] = L.mlp_init(ks[4], cfg)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k * CAPACITY_FACTOR / cfg.n_experts)
+    return max(8, min(n_tokens, c))
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D) plus aux load-balancing loss."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = L.dense_apply(p["router"], xf.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        jnp.ones((t * k,), jnp.float32)) / (t * k)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------------
+    flat_e = top_i.reshape(t * k)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert group
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < c
+    slot = jnp.where(keep, se * c + rank, e * c)  # overflow slot dropped
+
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(xf[st])
+    xe = buf[:-1].reshape(e, c, d)
+
+    # --- expert compute (EP shards the leading E axis) ----------------------
+    g = L.act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"]).reshape(e * c, d)
+
+    # --- combine -------------------------------------------------------------
+    contrib = ye[jnp.minimum(slot, e * c - 1)] * (
+        sw * keep.astype(jnp.float32))[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    out = out.reshape(b, s, d)
+
+    if "dense" in p:
+        out = out + L.mlp_apply(p["dense"], cfg, x)
+    return out, aux_loss

@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: norm -> { gate branch: gelu(W_gate x) ; recurrent branch:
+W_in x -> causal conv(4) -> RG-LRU } -> elementwise product -> W_out.
+
+RG-LRU (diagonal gates, per-channel):
+    r_t = sigmoid(w_a * u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(w_x * u_t + b_x)          (input gate)
+    log a_t = -C * r_t * softplus(lam)       (C = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+computed with an associative scan (the rglru_scan kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+RGLRU_C = 8.0
+
+
+def lru_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    w = cfg.lru_width
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L.dense_init(ks[0], cfg.d_model, w, dt),
+        "w_gate": L.dense_init(ks[1], cfg.d_model, w, dt),
+        "w_out": L.dense_init(ks[2], w, cfg.d_model, dt),
+        "conv_w": L.truncated_normal(ks[3], (4, w), dt, 0.5),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a_w": jnp.zeros((w,), jnp.float32),
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_x_w": jnp.zeros((w,), jnp.float32),
+        "gate_x_b": jnp.zeros((w,), jnp.float32),
+        # softplus(lam)=~0.35 at init => moderate decay
+        "lam": jnp.full((w,), -1.0, jnp.float32),
+    }
+
+
+def _conv_full(p, u):
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i]
+               for i in range(k)) + p["conv_b"]
+
+
+def _gates(p, u):
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["gate_a_w"] * u32 + p["gate_a_b"])
+    i = jax.nn.sigmoid(p["gate_x_w"] * u32 + p["gate_x_b"])
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    bx = beta * (i * u32)
+    return a, bx
+
+
+def lru_apply(p, cfg: ModelConfig, x, *, impl="reference",
+              init_state=None, return_state=False):
+    """x: (B, S, D) -> (B, S, D)."""
+    gate = jax.nn.gelu(L.dense_apply(p["w_gate"], x))
+    u = L.dense_apply(p["w_in"], x)
+    u_conv = _conv_full(p, u)
+    a, bx = _gates(p, u_conv)
+    h0 = None if init_state is None else init_state["h"]
+    h, h_last = ops.rglru_scan(a, bx, h0, impl=impl)
+    y = L.dense_apply(p["w_out"], h.astype(x.dtype) * gate)
+    if return_state:
+        k = p["conv_w"].shape[0]
+        s = u.shape[1]
+        if s >= k - 1:
+            conv_state = u[:, s - (k - 1):]
+        else:
+            conv_state = jnp.concatenate(
+                [jnp.zeros((u.shape[0], k - 1 - s, u.shape[2]), u.dtype), u], 1)
+        return y, {"h": h_last, "conv": conv_state}
+    return y
+
+
+def lru_state_init(cfg: ModelConfig, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+    }
+
+
+def lru_state_spec(cfg: ModelConfig, batch, dtype):
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, cfg.lru_width), dtype),
+    }
+
+
+def lru_decode_apply(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, D).  Returns (y, new_state)."""
+    gate = jax.nn.gelu(L.dense_apply(p["w_gate"], x[:, 0]))
+    u = L.dense_apply(p["w_in"], x[:, 0])  # (B, W)
+    window = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, W)
+    u_conv = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    a, bx = _gates(p, u_conv)
+    h = a * state["h"] + bx
+    y = L.dense_apply(p["w_out"], h.astype(x.dtype) * gate)[:, None]
+    return y, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,136 @@
+"""Mamba-2 (SSD) mixer layer: in-proj -> causal depthwise conv -> SSD -> gated
+norm -> out-proj.  Train/prefill uses the chunked SSD kernel; decode carries a
+recurrent state {ssm: (B,H,P,N), conv: (B, K-1, conv_ch)}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return di, n, h, conv_ch
+
+
+def ssm_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    di, n, h, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": L.dense_init(ks[0], cfg.d_model, proj_out, dt),
+        "conv_w": L.truncated_normal(ks[1], (cfg.ssm_conv, conv_ch), dt,
+                                     cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "d": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dt),
+        "out_proj": L.dense_init(ks[2], di, cfg.d_model, dt),
+    }
+
+
+def _split(cfg, proj):
+    di, n, h, _ = _dims(cfg)
+    z, xc, b, c, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xc, b, c, dt_raw
+
+
+def _conv_full(p, u):
+    """Causal depthwise conv over (B, S, CH) with taps K."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(k))
+    return out + p["conv_b"]
+
+
+def ssm_apply(p, cfg: ModelConfig, x, *, impl="reference",
+              init_state=None, return_state=False):
+    """x: (B, S, D) -> (B, S, D).  Optionally returns final SSD+conv state."""
+    b, s, _ = x.shape
+    di, n, h, conv_ch = _dims(cfg)
+    proj = L.dense_apply(p["in_proj"], x)
+    z, xbc_pre, b_pre, c_pre, dt_raw = _split(cfg, proj)
+    raw = jnp.concatenate([xbc_pre, b_pre, c_pre], axis=-1)
+    xbc = jax.nn.silu(_conv_full(p, raw))
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    xh = xi.reshape(b, s, h, cfg.ssm_head_dim)
+    ssd_state = None if init_state is None else init_state["ssm"]
+    # Pad to a chunk multiple: dt=0 rows are exact no-ops (decay 1, zero input).
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        pz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, dt, bmat, cmat = pz(xh), pz(dt), pz(bmat), pz(cmat)
+    out = ops.ssd(xh, dt, p["a_log"], bmat, cmat, p["d"], chunk=cfg.ssm_chunk,
+                  init_state=ssd_state, return_state=return_state, impl=impl)
+    if pad:
+        out = ((out[0][:, :s], out[1]) if return_state else out[:, :s])
+    if return_state:
+        y, final = out
+    else:
+        y = out
+    y = y.reshape(b, s, di)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = L.dense_apply(p["out_proj"], y)
+    if return_state:
+        # conv state for decode: last K-1 *pre-activation* conv inputs
+        conv_state = _tail_conv_state(raw, p["conv_w"].shape[0])
+        return y, {"ssm": final, "conv": conv_state}
+    return y
+
+
+def _tail_conv_state(u, k):
+    """Last K-1 rows of u (B, S, CH), left-padded with zeros if S < K-1."""
+    b, s, ch = u.shape
+    if s >= k - 1:
+        return u[:, s - (k - 1):]
+    pad = jnp.zeros((b, (k - 1) - s, ch), u.dtype)
+    return jnp.concatenate([pad, u], axis=1)
+
+
+def ssm_state_init(cfg: ModelConfig, batch, dtype):
+    di, n, h, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssm_state_spec(cfg: ModelConfig, batch, dtype):
+    di, n, h, conv_ch = _dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_apply(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, D), state from ssm_state_init.  Returns (y, new_state)."""
+    b = x.shape[0]
+    di, n, h, conv_ch = _dims(cfg)
+    proj = L.dense_apply(p["in_proj"], x[:, 0])  # (B, P)
+    z, xbc_pre, bmat, cmat, dt_raw = _split(cfg, proj)
+    raw = jnp.concatenate([xbc_pre, bmat, cmat], axis=-1)  # (B, CH)
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], raw[:, None]], axis=1)  # (B, K, CH)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xi.reshape(b, h, cfg.ssm_head_dim)
+    y, new_ssm = ops.ssd_decode(xh, dt, p["a_log"], bmat, cmat, p["d"],
+                                state["ssm"])
+    y = y.reshape(b, di)
+    y = L.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = L.dense_apply(p["out_proj"], y)[:, None]
+    return y, {"ssm": new_ssm, "conv": window[:, 1:]}

@@ -1,0 +1,242 @@
+"""Stacked-transformer assembly for every architecture family.
+
+A model is a list of scan groups; each group is a superblock (tuple of
+LayerSpecs) whose params are stacked over ``n`` repeats and driven by
+``lax.scan``.  Three execution paths share the same params:
+
+  * ``stack_apply``  — full-sequence forward (training / scoring)
+  * ``stack_prefill``— full-sequence forward that also emits decode caches
+  * ``stack_decode`` — single-token step carrying caches/recurrent states
+
+Blocks: mixer (attention / RG-LRU / SSD) + optional FFN (gated MLP or MoE),
+with pre-norms; decoder blocks of enc-dec models add cross-attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LRU, SSM, LayerSpec, ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.parallel import ctx
+
+
+def groups_of(cfg: ModelConfig) -> list[tuple[tuple[LayerSpec, ...], int]]:
+    gs = [(cfg.superblock, cfg.n_superblocks)]
+    if cfg.tail:
+        gs.append((cfg.tail, 1))
+    return gs
+
+
+# ------------------------------------------------------------------- blocks
+
+def block_init(key, cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model, dt)}
+    if spec.kind == ATTN:
+        p["mixer"] = A.attn_init(ks[0], cfg)
+    elif spec.kind == LRU:
+        p["mixer"] = R.lru_init(ks[0], cfg)
+    else:
+        p["mixer"] = S.ssm_init(ks[0], cfg)
+    if cross:
+        p["lnx"] = L.rmsnorm_init(cfg.d_model, dt)
+        p["xattn"] = A.attn_init(ks[1], cfg, cross=True)
+    if spec.has_ffn and cfg.ffn_kind != "none":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = (M.moe_init(ks[2], cfg) if cfg.ffn_kind == "moe"
+                    else L.mlp_init(ks[2], cfg))
+    return p
+
+
+def _ffn(p, cfg, x):
+    if "ffn" not in p:
+        return x, 0.0
+    h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if cfg.ffn_kind == "moe":
+        y, aux = M.moe_apply(p["ffn"], cfg, h)
+        return x + y, aux
+    return x + L.mlp_apply(p["ffn"], cfg, h), 0.0
+
+
+def block_apply(p, cfg, spec, x, positions, *, causal=True, impl="reference",
+                enc_out=None, want_state=False):
+    """Full-sequence block.  Returns (x, aux_loss, state_or_None)."""
+    h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    state = None
+    if spec.kind == ATTN:
+        if want_state:
+            y, kv = A.attn_apply_with_kv(p["mixer"], cfg, spec, h, positions,
+                                         causal=causal, impl=impl)
+            state = kv
+        else:
+            y = A.attn_apply(p["mixer"], cfg, spec, h, positions,
+                             causal=causal, impl=impl)
+    elif spec.kind == LRU:
+        out = R.lru_apply(p["mixer"], cfg, h, impl=impl, return_state=want_state)
+        y, state = out if want_state else (out, None)
+    else:
+        out = S.ssm_apply(p["mixer"], cfg, h, impl=impl, return_state=want_state)
+        y, state = out if want_state else (out, None)
+    x = x + y
+    if enc_out is not None:
+        hx = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
+        x = x + A.cross_attn_apply(p["xattn"], cfg, hx, enc_out, impl=impl)
+    x, aux = _ffn(p, cfg, x)
+    return x, aux, state
+
+
+def block_decode(p, cfg, spec, x, cache, t, *, impl="reference", cross=False):
+    """Single-token block step.  Returns (x, new_cache)."""
+    mixer_cache = cache["self"] if cross else cache
+    h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if spec.kind == ATTN:
+        y, new_mixer = A.attn_decode_apply(p["mixer"], cfg, spec, h,
+                                           mixer_cache, t, impl=impl)
+    elif spec.kind == LRU:
+        y, new_mixer = R.lru_decode_apply(p["mixer"], cfg, h, mixer_cache)
+    else:
+        y, new_mixer = S.ssm_decode_apply(p["mixer"], cfg, h, mixer_cache)
+    x = x + y
+    if cross:
+        hx = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
+        x = x + A.cross_attn_apply(p["xattn"], cfg, hx, enc_kv=cache["xkv"],
+                                   impl=impl)
+    x, _ = _ffn(p, cfg, x)
+    new_cache = {"self": new_mixer, "xkv": cache["xkv"]} if cross else new_mixer
+    return x, new_cache
+
+
+# -------------------------------------------------------------- scan groups
+
+def group_init(key, cfg: ModelConfig, specs, n: int, cross: bool = False):
+    def init_one(k):
+        kk = jax.random.split(k, len(specs))
+        return {f"b{i}": block_init(kk[i], cfg, s, cross)
+                for i, s in enumerate(specs)}
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def stack_init(key, cfg: ModelConfig, cross: bool = False):
+    gs = groups_of(cfg)
+    keys = jax.random.split(key, len(gs))
+    return [group_init(k, cfg, specs, n, cross)
+            for k, (specs, n) in zip(keys, gs)]
+
+
+def stack_apply(groups_params, cfg: ModelConfig, x, positions, *, causal=True,
+                impl="reference", enc_out=None, remat=True):
+    aux_total = jnp.zeros((), jnp.float32)
+    for (specs, n), gp in zip(groups_of(cfg), groups_params):
+        def body(carry, layer_p, specs=specs):
+            xc, aux = carry
+            xc = ctx.constrain(xc, ctx.BATCH, None, None)
+            for i, spec in enumerate(specs):
+                xc, a, _ = block_apply(layer_p[f"b{i}"], cfg, spec, xc,
+                                       positions, causal=causal, impl=impl,
+                                       enc_out=enc_out)
+                aux = aux + a
+            return (xc, aux), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), gp)
+    return x, aux_total
+
+
+def group_cache_init(cfg: ModelConfig, specs, n, batch, max_len, dtype,
+                     cross=False, enc_len=None):
+    def one(spec):
+        if spec.kind == ATTN:
+            c = A.cache_init(cfg, spec, batch, max_len, dtype)
+        elif spec.kind == LRU:
+            c = R.lru_state_init(cfg, batch, dtype)
+        else:
+            c = S.ssm_state_init(cfg, batch, dtype)
+        if cross:
+            kv = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            return {"self": c, "xkv": {"k": kv, "v": kv}}
+        return c
+    block = {f"b{i}": one(s) for i, s in enumerate(specs)}
+    return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), block)
+
+
+def cache_init(cfg: ModelConfig, batch, max_len, dtype, cross=False,
+               enc_len=None):
+    return [group_cache_init(cfg, specs, n, batch, max_len, dtype, cross,
+                             enc_len)
+            for specs, n in groups_of(cfg)]
+
+
+def stack_prefill(groups_params, cfg: ModelConfig, x, positions, caches, *,
+                  impl="reference", enc_out=None):
+    """Full forward that fills decode caches.  ``caches`` from cache_init."""
+    seq_len = x.shape[1]
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for (specs, n), gp, gc in zip(groups_of(cfg), groups_params, caches):
+        def body(carry, inp, specs=specs):
+            xc, aux = carry
+            xc = ctx.constrain(xc, ctx.BATCH, None, None)
+            layer_p, cache = inp
+            out_cache = {}
+            for i, spec in enumerate(specs):
+                p = layer_p[f"b{i}"]
+                bc = cache[f"b{i}"]
+                mixer_cache = bc["self"] if enc_out is not None else bc
+                h = L.rmsnorm_apply(p["ln1"], xc, cfg.norm_eps)
+                if spec.kind == ATTN:
+                    y, kv = A.attn_apply_with_kv(p["mixer"], cfg, spec, h,
+                                                 positions, causal=True,
+                                                 impl=impl)
+                    new_mixer = A.prefill_into_cache(
+                        mixer_cache, spec, kv["k"], kv["v"], seq_len)
+                elif spec.kind == LRU:
+                    y, new_mixer = R.lru_apply(p["mixer"], cfg, h, impl=impl,
+                                               return_state=True)
+                else:
+                    y, new_mixer = S.ssm_apply(p["mixer"], cfg, h, impl=impl,
+                                               return_state=True)
+                xc = xc + y
+                if enc_out is not None:
+                    hx = L.rmsnorm_apply(p["lnx"], xc, cfg.norm_eps)
+                    xkv = A.encode_cross_kv(p["xattn"], cfg, enc_out)
+                    xc = xc + A.cross_attn_apply(p["xattn"], cfg, hx,
+                                                 enc_kv=xkv, impl=impl)
+                    out_cache[f"b{i}"] = {"self": new_mixer,
+                                          "xkv": jax.tree.map(
+                                              lambda a: a.astype(cfg.dtype), xkv)}
+                else:
+                    out_cache[f"b{i}"] = new_mixer
+                xc, a = _ffn(p, cfg, xc)
+                aux = aux + a
+            return (xc, aux), out_cache
+        (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), (gp, gc))
+        new_caches.append(nc)
+    return x, aux_total, new_caches
+
+
+def stack_decode(groups_params, cfg: ModelConfig, x, caches, t, *,
+                 impl="reference", cross=False):
+    """x: (B, 1, D); t: scalar position.  Returns (x, new_caches)."""
+    new_caches = []
+    for (specs, n), gp, gc in zip(groups_of(cfg), groups_params, caches):
+        def body(xc, inp, specs=specs):
+            xc = ctx.constrain(xc, ctx.BATCH, None, None)
+            layer_p, cache = inp
+            out_cache = {}
+            for i, spec in enumerate(specs):
+                xc, out_cache[f"b{i}"] = block_decode(
+                    layer_p[f"b{i}"], cfg, spec, xc, cache[f"b{i}"], t,
+                    impl=impl, cross=cross)
+            return xc, out_cache
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches

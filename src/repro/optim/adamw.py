@@ -1,0 +1,83 @@
+"""AdamW with mixed-precision state policy + global-norm clipping.
+
+States: fp32 master copy + m/v in a configurable dtype (fp32 default, bf16 to
+halve optimizer memory — the trade recorded in EXPERIMENTS.md §Perf for the
+arctic-480b cell).  Pure functional: (params, state, grads) -> (params, state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"  # m/v dtype; "bfloat16" halves opt memory
+    master_dtype: str = "float32"
+
+
+def init(cfg: AdamWConfig, params):
+    sd = jnp.dtype(cfg.state_dtype)
+    md = jnp.dtype(cfg.master_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params),
+        # copy=True: fp32 params would otherwise alias the master buffer and
+        # break donation (same buffer donated twice in one call)
+        "master": jax.tree.map(lambda p: jnp.array(p, dtype=md, copy=True),
+                               params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: AdamWConfig, params, state, grads,
+           lr_scale: Optional[jax.Array] = None):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * (lr_scale if lr_scale is not None else 1.0)
+
+    def upd(p, m, v, g, master):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        master32 = master.astype(jnp.float32)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master32
+        new_master = master32 - lr * delta
+        return (new_master.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype), new_master.astype(master.dtype))
+
+    out = jax.tree.map(upd, params, state["m"], state["v"], grads,
+                       state["master"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda o: o[3], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v, "master": new_master}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

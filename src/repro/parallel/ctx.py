@@ -1,0 +1,78 @@
+"""Activation-sharding context.
+
+GSPMD's sharding propagation weakens inside ``while`` (scan) bodies: the loop
+carry can silently decay to replicated, blowing up per-device memory.  Models
+therefore annotate their key intermediates (block inputs, logits) through this
+context.  Outside a context (unit tests, single-device runs) the annotations
+are no-ops, keeping model code backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+BATCH = "@batch"   # placeholder resolved to the context's batch axes
+TP = "@tp"         # placeholder resolved to the context's tensor axis
+
+
+class ShardingCtx:
+    def __init__(self, mesh, batch_axes, tp_axis: Optional[str] = "model"):
+        self.mesh = mesh
+        self.batch_axes = tuple(a for a in (batch_axes or ()) if a)
+        self.tp_axis = tp_axis
+
+    def resolve(self, dims) -> P:
+        parts = []
+        for d in dims:
+            if d == BATCH:
+                ba = self.batch_axes
+                parts.append(ba if len(ba) > 1 else (ba[0] if ba else None))
+            elif d == TP:
+                parts.append(self.tp_axis)
+            else:
+                parts.append(d)
+        return P(*parts)
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(mesh, batch_axes, tp_axis: Optional[str] = "model"):
+    prev = current()
+    _TLS.ctx = ShardingCtx(mesh, batch_axes, tp_axis)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain(x, *dims, divisible: bool = True):
+    """with_sharding_constraint(x, dims) if a context is active, else x.
+    Axes that don't divide the corresponding dim are dropped."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(dims)
+    if divisible:
+        parts = []
+        for i, pspec in enumerate(spec):
+            if pspec is None:
+                parts.append(None)
+                continue
+            axes = pspec if isinstance(pspec, tuple) else (pspec,)
+            k = 1
+            for a in axes:
+                k *= ctx.mesh.shape[a]
+            parts.append(pspec if x.shape[i] % k == 0 else None)
+        spec = P(*parts)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,50 @@
+"""Parameter-reallocation executor: move a param pytree from one
+(mesh, sharding) to another.
+
+The schedule model lives in ``core/realloc.py`` (the paper's Fig. 6
+algorithm); execution defers to XLA: a jitted identity with
+``out_shardings=dst`` lowers to the minimal collective-permute /
+all-gather/dynamic-slice program on ICI.  Same-mesh reshards happen fully
+on-device; cross-mesh moves (disjoint device sets) go through
+``jax.device_put``, which uses ICI/DCN transfers on real fleets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=64)
+def _reshard_fn(treedef, src_shardings, dst_shardings):
+    def identity(tree):
+        return tree
+
+    return jax.jit(identity,
+                   in_shardings=(jax.tree.unflatten(treedef,
+                                                    list(src_shardings)),),
+                   out_shardings=jax.tree.unflatten(treedef,
+                                                    list(dst_shardings)))
+
+
+def reshard(tree, dst_sharding_tree):
+    """Reallocate ``tree`` to the shardings in ``dst_sharding_tree``.
+
+    Uses a cached jitted identity when src/dst meshes share devices (pure
+    collective program); falls back to device_put otherwise."""
+    leaves, treedef = jax.tree.flatten(tree)
+    dst = jax.tree.leaves(dst_sharding_tree)
+    src = [l.sharding if hasattr(l, "sharding") else None for l in leaves]
+    same_devices = all(
+        getattr(s, "device_set", None) == getattr(d, "device_set", "x")
+        for s, d in zip(src, dst))
+    if same_devices and all(s is not None for s in src):
+        fn = _reshard_fn(treedef, tuple(src), tuple(dst))
+        return fn(tree)
+    return jax.tree.unflatten(
+        treedef, [jax.device_put(l, d) for l, d in zip(leaves, dst)])
+
+
+def realloc_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

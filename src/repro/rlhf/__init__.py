@@ -1,0 +1,1 @@
+"""RLHF algorithms: PPO, DPO, GRPO, ReMax + experiment API."""

@@ -1,0 +1,167 @@
+"""User-facing experiment API (paper Appendix B, Fig. 18).
+
+``RLHFExperiment`` takes the algorithm name + model configs + workload, runs
+the plan search under the hood (the paper's ``@auto`` decorator), builds the
+jitted executors for every model function call, and returns a RuntimeEngine
+ready to run iterations with parameter reallocation.
+
+This is the end-to-end integration of the paper's technique: search -> plan
+-> runtime -> reallocation, with real JAX computation behind every call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import dfg as DFG
+from repro.core.estimator import CostModel, Profile
+from repro.core.plan import Cluster, ExecutionPlan
+from repro.core.runtime import ModelState, RuntimeEngine
+from repro.core.search import heuristic_plan, mcmc_search
+from repro.models import model as MDL
+from repro.optim import adamw
+from repro.rlhf import ppo as PPO
+from repro.rlhf import reward as RWD
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    algorithm: str = "ppo"
+    batch: int = 8
+    prompt_len: int = 16
+    gen_len: int = 16
+    seed: int = 0
+    ppo: PPO.PPOHyperparameters = dataclasses.field(
+        default_factory=PPO.PPOHyperparameters)
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    search_iters: int = 300
+    impl: str = "reference"
+
+
+class RLHFExperiment:
+    """PPO experiment: 4 models, 6 function calls, searched execution plan."""
+
+    def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
+                 cluster: Cluster, exp: ExperimentConfig,
+                 plan: Optional[ExecutionPlan] = None,
+                 search: bool = True):
+        self.actor_cfg, self.critic_cfg, self.exp = actor_cfg, critic_cfg, exp
+        self.cluster = cluster
+        self.graph = DFG.build_ppo(
+            actor_cfg, critic_cfg, batch=exp.batch, prompt_len=exp.prompt_len,
+            gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches)
+        self.cost = CostModel(cluster)
+        if plan is None:
+            if search:
+                plan = mcmc_search(self.graph, cluster, self.cost,
+                                   iters=exp.search_iters,
+                                   seed=exp.seed).best_plan
+            else:
+                plan = heuristic_plan(self.graph, cluster, self.cost)
+        self.plan = plan
+        self._build_models()
+        self._build_executors()
+        self.engine = RuntimeEngine(self.graph, self.plan, self.executors,
+                                    self.models, cost_model=self.cost)
+
+    # ------------------------------------------------------------- models
+    def _build_models(self):
+        rngs = jax.random.split(jax.random.PRNGKey(self.exp.seed), 4)
+        a, c = self.actor_cfg, self.critic_cfg
+        self.models = {
+            "actor": ModelState(MDL.init_params(rngs[0], a, head="lm"),
+                                adamw.init(self.exp.opt, {})),
+            "ref": ModelState(MDL.init_params(rngs[0], a, head="lm")),
+            "critic": ModelState(MDL.init_params(rngs[2], c, head="value")),
+            "reward": ModelState(MDL.init_params(rngs[3], c, head="value")),
+        }
+        self.models["actor"].opt_state = adamw.init(
+            self.exp.opt, self.models["actor"].params)
+        self.models["critic"].opt_state = adamw.init(
+            self.exp.opt, self.models["critic"].params)
+
+    # ---------------------------------------------------------- executors
+    def _build_executors(self):
+        exp, a_cfg, c_cfg = self.exp, self.actor_cfg, self.critic_cfg
+        hp = exp.ppo
+        gen_start = exp.prompt_len
+        impl = exp.impl
+        rng = jax.random.PRNGKey(exp.seed + 1)
+
+        gen_fn = jax.jit(lambda p, b, k: MDL.generate(
+            p, a_cfg, b, num_new_tokens=exp.gen_len, rng=k, impl=impl))
+        ref_fn = jax.jit(lambda p, toks: PPO.sequence_logprobs(
+            p, a_cfg, toks, gen_start, impl=impl, remat=False))
+        rew_fn = jax.jit(lambda p, toks, m: RWD.score_sequences(
+            p, c_cfg, toks, m, impl=impl))
+        val_fn = jax.jit(lambda p, toks: PPO.sequence_values(
+            p, c_cfg, toks, gen_start, impl=impl, remat=False))
+        actor_step = jax.jit(PPO.make_actor_train_step(
+            a_cfg, hp, exp.opt, gen_start, impl=impl), donate_argnums=(0, 1))
+        critic_step = jax.jit(PPO.make_critic_train_step(
+            c_cfg, hp, exp.opt, gen_start, impl=impl), donate_argnums=(0, 1))
+
+        state = {"rng": rng}
+
+        def actor_gen(ms, inputs):
+            state["rng"], k = jax.random.split(state["rng"])
+            out = gen_fn(ms.params, inputs["prompts"], k)
+            toks = jnp.concatenate([inputs["prompts"]["tokens"],
+                                    out["tokens"]], axis=1)
+            mask = jnp.ones_like(out["logprobs"])
+            return {"seq": toks, "logp": out["logprobs"], "gen_mask": mask}
+
+        def reward_inf(ms, inputs):
+            full_mask = jnp.ones(inputs["seq"].shape, jnp.float32)
+            return {"rewards": rew_fn(ms.params, inputs["seq"], full_mask)}
+
+        def ref_inf(ms, inputs):
+            return {"ref_logp": ref_fn(ms.params, inputs["seq"])}
+
+        def critic_inf(ms, inputs):
+            return {"values": val_fn(ms.params, inputs["seq"])}
+
+        def actor_train(ms, inputs):
+            mask = inputs["gen_mask"]
+            shaped = PPO.shaped_rewards(hp, inputs["rewards"], inputs["logp"],
+                                        inputs["ref_logp"], mask)
+            adv, _ = PPO.gae(hp, shaped, inputs["values"], mask)
+            batch = {"tokens": inputs["seq"], "logp": inputs["logp"],
+                     "adv": adv, "mask": mask}
+            ms.params, ms.opt_state, stats = actor_step(ms.params,
+                                                        ms.opt_state, batch)
+            return {"actor_stats": jax.tree.map(float, stats)}
+
+        def critic_train(ms, inputs):
+            mask = inputs["gen_mask"]
+            shaped = PPO.shaped_rewards(hp, inputs["rewards"], inputs["logp"],
+                                        inputs["ref_logp"], mask)
+            _, ret = PPO.gae(hp, shaped, inputs["values"], mask)
+            batch = {"tokens": inputs["seq"], "values": inputs["values"][:, :-1],
+                     "ret": ret, "mask": mask}
+            ms.params, ms.opt_state, stats = critic_step(ms.params,
+                                                         ms.opt_state, batch)
+            return {"critic_stats": jax.tree.map(float, stats)}
+
+        self.executors = {
+            "actor_gen": actor_gen, "reward_inf": reward_inf,
+            "ref_inf": ref_inf, "critic_inf": critic_inf,
+            "actor_train": actor_train, "critic_train": critic_train,
+        }
+
+    # ------------------------------------------------------------ running
+    def make_prompts(self, rng):
+        toks = jax.random.randint(
+            rng, (self.exp.batch, self.exp.prompt_len), 0,
+            self.actor_cfg.vocab_size, jnp.int32)
+        return {"tokens": toks}
+
+    def run_iteration(self, rng) -> dict:
+        data = {"prompts": self.make_prompts(rng)}
+        out = self.engine.run_iteration(data)
+        return out

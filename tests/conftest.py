@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and only the dry-run,
+# forces 512 host devices in its own process).  Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,289 @@
+"""ReaL core: plans, estimator, simulator (Algorithm 1), realloc schedule,
+MCMC search — unit + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import hw
+from repro.configs.llama import LLAMA_7B, critic_of
+from repro.core import realloc
+from repro.core.dfg import (GENERATE, INFERENCE, TRAIN, DataflowGraph,
+                            FunctionCall, Workload, build_dpo, build_grpo,
+                            build_ppo, build_remax)
+from repro.core.estimator import CostModel
+from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
+                             ParallelStrategy, strategies_for)
+from repro.core.search import (brute_force, candidate_assignments, greedy_plan,
+                               heuristic_plan, mcmc_search, plan_cost)
+from repro.core.simulator import build_augmented_graph, max_mem_per_device, simulate
+
+CLUSTER = Cluster(n_nodes=2, devs_per_node=8, chip=hw.H100,
+                  intra_node_bw=450e9, inter_node_bw=50e9)
+
+
+def ppo_graph(batch=512):
+    return build_ppo(LLAMA_7B, critic_of(LLAMA_7B), batch=batch,
+                     prompt_len=1024, gen_len=1024, n_minibatches=8)
+
+
+# ------------------------------------------------------------------ plans
+
+def test_legal_meshes_tile_cluster():
+    meshes = CLUSTER.legal_meshes()
+    # paper: >500 strategy options per call on a (8,8)-ish cluster
+    full = [m for m in meshes if m.size == CLUSTER.size]
+    assert len(full) == 1
+    for m in meshes:
+        assert m.size in {1, 2, 4, 8, 16}
+        devs = m.devices(CLUSTER.devs_per_node)
+        assert len(devs) == m.size
+
+
+def test_mesh_overlap():
+    a = DeviceMesh(0, 1, 0, 8)
+    b = DeviceMesh(1, 1, 0, 8)
+    c = DeviceMesh(0, 2, 0, 8)
+    d = DeviceMesh(0, 1, 0, 4)
+    e = DeviceMesh(0, 1, 4, 4)
+    assert not a.overlaps(b) and c.overlaps(a) and c.overlaps(b)
+    assert a.overlaps(d) and not d.overlaps(e)
+
+
+def test_strategies_pruning():
+    mesh = DeviceMesh(0, 2, 0, 8)
+    strats = strategies_for(mesh, CLUSTER, num_layers=32)
+    assert all(s.dp * s.tp * s.pp == 16 for s in strats)
+    assert all(s.tp <= 8 for s in strats)  # tp within a node
+    assert all(s.mbs >= s.pp or s.pp == 1 for s in strats)
+
+
+def test_candidate_count_matches_paper_scale():
+    dfg = ppo_graph()
+    cands = candidate_assignments(dfg, CLUSTER)
+    for c in dfg.calls:
+        assert len(cands[c.name]) > 400  # paper: >500 options on (8,8)
+
+
+# ------------------------------------------------------------------- dfg
+
+@pytest.mark.parametrize("builder,n_calls", [
+    (lambda: ppo_graph(), 6),
+    (lambda: build_dpo(LLAMA_7B, batch=64, prompt_len=256, gen_len=256), 2),
+    (lambda: build_grpo(LLAMA_7B, batch=64, prompt_len=256, gen_len=256), 4),
+    (lambda: build_remax(LLAMA_7B, batch=64, prompt_len=256, gen_len=256), 6),
+])
+def test_graph_builders(builder, n_calls):
+    g = builder()
+    assert len(g.calls) == n_calls
+    order = [c.name for c in g.topo_order()]
+    assert len(order) == n_calls
+    for c in g.calls:
+        for p in g.parents(c):
+            assert order.index(p.name) < order.index(c.name)
+
+
+def test_remax_generations_independent():
+    g = build_remax(LLAMA_7B, batch=64, prompt_len=128, gen_len=128)
+    g1 = g.by_name["actor_gen"]
+    g2 = g.by_name["actor_gen_greedy"]
+    assert g1 not in g.parents(g2) and g2 not in g.parents(g1)
+
+
+# -------------------------------------------------------------- estimator
+
+def test_estimator_monotonic_in_devices():
+    cost = CostModel(CLUSTER)
+    call = ppo_graph().by_name["actor_train"]
+    small = Assignment(DeviceMesh(0, 1, 0, 8), ParallelStrategy(2, 4, 1, 8))
+    big = Assignment(DeviceMesh(0, 2, 0, 8), ParallelStrategy(4, 4, 1, 8))
+    assert cost.call_cost(call, big).compute < cost.call_cost(call, small).compute
+
+
+def test_estimator_decode_prefers_tp_over_pp():
+    """Paper Fig. 10: generation should cost less with TP than deep PP."""
+    cost = CostModel(CLUSTER)
+    call = ppo_graph().by_name["actor_gen"]
+    mesh = DeviceMesh(0, 1, 0, 8)
+    t_tp = cost.call_time(call, Assignment(mesh, ParallelStrategy(1, 8, 1, 1)))
+    t_pp = cost.call_time(call, Assignment(mesh, ParallelStrategy(1, 1, 8, 1)))
+    assert t_tp < t_pp
+
+
+def test_estimator_memory_properties():
+    cost = CostModel(CLUSTER)
+    call = ppo_graph().by_name["actor_train"]
+    mesh = DeviceMesh(0, 2, 0, 8)
+    # more microbatches => smaller live activations
+    m8 = cost.active_mem_per_dev(call, Assignment(mesh, ParallelStrategy(2, 8, 1, 8)))
+    m16 = cost.active_mem_per_dev(call, Assignment(mesh, ParallelStrategy(2, 8, 1, 16)))
+    assert m16 < m8
+    # model sharding (tp) shrinks grads held per device
+    s_dp = cost.static_mem_per_dev(call.config,
+                                   Assignment(mesh, ParallelStrategy(16, 1, 1, 8)))
+    s_tp = cost.static_mem_per_dev(call.config,
+                                   Assignment(mesh, ParallelStrategy(2, 8, 1, 8)))
+    assert s_tp < s_dp
+
+
+# -------------------------------------------------------------- simulator
+
+def _toy_call(name, mesh, dur_batch):
+    cfg = LLAMA_7B
+    return FunctionCall(name, name, INFERENCE, cfg,
+                        Workload(dur_batch, 128, 0), (), (name + "_out",))
+
+
+def test_simulator_chain_and_parallel():
+    cost = CostModel(CLUSTER)
+    cfg = LLAMA_7B
+    w = Workload(64, 512, 0)
+    a = FunctionCall("a", "ma", INFERENCE, cfg, w, (), ("x",))
+    b = FunctionCall("b", "mb", INFERENCE, cfg, w, ("x",), ("y",))
+    chain = DataflowGraph([a, b], "toy")
+    mesh = DeviceMesh(0, 2, 0, 8)
+    asg = Assignment(mesh, ParallelStrategy(16, 1, 1, 1))
+    plan = ExecutionPlan({"a": asg, "b": asg}, CLUSTER)
+    r = simulate(chain, plan, cost)
+    ta = cost.call_time(a, asg)
+    assert r.total_time == pytest.approx(2 * ta, rel=1e-6)
+
+    # independent calls on disjoint meshes run concurrently
+    c = FunctionCall("c", "mc", INFERENCE, cfg, w, (), ("z",))
+    par = DataflowGraph([a, c], "toy")
+    m1 = DeviceMesh(0, 1, 0, 8)
+    m2 = DeviceMesh(1, 1, 0, 8)
+    s8 = ParallelStrategy(8, 1, 1, 1)
+    plan2 = ExecutionPlan({"a": Assignment(m1, s8), "c": Assignment(m2, s8)},
+                          CLUSTER)
+    r2 = simulate(par, plan2, cost)
+    t1 = cost.call_time(a, Assignment(m1, s8))
+    assert r2.total_time == pytest.approx(t1, rel=1e-6)
+
+    # same two calls on overlapping meshes serialize (Algorithm 1 exclusivity)
+    plan3 = ExecutionPlan({"a": Assignment(m1, s8), "c": Assignment(m1, s8)},
+                          CLUSTER)
+    r3 = simulate(par, plan3, cost)
+    assert r3.total_time == pytest.approx(2 * t1, rel=1e-6)
+
+
+def test_simulator_inserts_realloc_nodes():
+    cost = CostModel(CLUSTER)
+    dfg = ppo_graph()
+    cands = candidate_assignments(dfg, CLUSTER)
+    plan = greedy_plan(dfg, CLUSTER, cost, cands)
+    # force actor train on a different mesh than generation
+    plan.assignments["actor_gen"] = Assignment(
+        DeviceMesh(0, 2, 0, 8), ParallelStrategy(2, 8, 1, 1))
+    plan.assignments["actor_train"] = Assignment(
+        DeviceMesh(0, 1, 0, 8), ParallelStrategy(2, 1, 4, 8))
+    nodes = build_augmented_graph(dfg, plan, cost)
+    rn = [n for n in nodes.values() if n.kind == "realloc"]
+    assert any("actor" in n.name for n in rn)
+    r = simulate(dfg, plan, cost)
+    assert r.realloc_time > 0
+
+
+# ---------------------------------------------------------------- realloc
+
+ASGS = st.sampled_from([
+    Assignment(DeviceMesh(0, 2, 0, 8), ParallelStrategy(2, 8, 1, 1)),
+    Assignment(DeviceMesh(0, 2, 0, 8), ParallelStrategy(2, 1, 8, 1)),
+    Assignment(DeviceMesh(0, 1, 0, 8), ParallelStrategy(2, 2, 2, 1)),
+    Assignment(DeviceMesh(1, 1, 0, 8), ParallelStrategy(8, 1, 1, 1)),
+    Assignment(DeviceMesh(0, 1, 0, 4), ParallelStrategy(1, 4, 1, 1)),
+    Assignment(DeviceMesh(0, 2, 0, 8), ParallelStrategy(4, 2, 2, 1)),
+    Assignment(DeviceMesh(0, 1, 4, 4), ParallelStrategy(2, 2, 1, 1)),
+])
+
+
+@settings(max_examples=20, deadline=None)
+@given(ASGS, ASGS)
+def test_realloc_schedule_coverage(src, dst):
+    """Fig. 6 algorithm: every dst device receives every byte of its slice."""
+    sched = realloc.remap_schedule(LLAMA_7B, src, dst, CLUSTER)
+    assert realloc.coverage_ok(LLAMA_7B, src, dst, CLUSTER, sched)
+
+
+def test_realloc_same_layout_is_free():
+    a = Assignment(DeviceMesh(0, 2, 0, 8), ParallelStrategy(2, 8, 1, 1))
+    sched = realloc.remap_schedule(LLAMA_7B, a, a, CLUSTER)
+    assert sched.total_bytes == 0 and sched.time == 0
+
+
+def test_realloc_total_bytes_bounded():
+    """Reallocation never moves more than dst replicas' full copies."""
+    src = Assignment(DeviceMesh(0, 1, 0, 8), ParallelStrategy(1, 8, 1, 1))
+    dst = Assignment(DeviceMesh(1, 1, 0, 8), ParallelStrategy(8, 1, 1, 1))
+    sched = realloc.remap_schedule(LLAMA_7B, src, dst, CLUSTER)
+    model_bytes = sum(realloc.layer_bytes(LLAMA_7B))
+    assert 0 < sched.total_bytes <= 8 * model_bytes
+
+
+# ----------------------------------------------------------------- search
+
+def test_mcmc_beats_or_matches_heuristic():
+    dfg = ppo_graph()
+    cost = CostModel(CLUSTER)
+    hp = heuristic_plan(dfg, CLUSTER, cost)
+    ht = simulate(dfg, hp, cost).total_time
+    res = mcmc_search(dfg, CLUSTER, cost, iters=400, seed=0)
+    assert res.best_time <= ht
+    # memory cap respected
+    assert max_mem_per_device(dfg, res.best_plan, cost) < hw.H100.hbm_bytes
+
+
+def test_mcmc_deterministic_with_seed():
+    dfg = ppo_graph()
+    cost = CostModel(CLUSTER)
+    r1 = mcmc_search(dfg, CLUSTER, cost, iters=100, seed=42)
+    r2 = mcmc_search(dfg, CLUSTER, cost, iters=100, seed=42)
+    assert r1.best_time == r2.best_time
+    assert r1.best_plan.fingerprint() == r2.best_plan.fingerprint()
+
+
+def test_brute_force_on_tiny_cluster():
+    tiny = Cluster(n_nodes=1, devs_per_node=2, chip=hw.H100,
+                   intra_node_bw=450e9, inter_node_bw=50e9)
+    dfg = build_dpo(LLAMA_7B, batch=64, prompt_len=256, gen_len=256)
+    cost = CostModel(tiny)
+    bf = brute_force(dfg, tiny, cost)
+    res = mcmc_search(dfg, tiny, cost, iters=800, seed=1)
+    # paper Fig. 15: MCMC reaches >=95% of brute-force optimum
+    assert res.best_time <= bf.best_time / 0.95
+
+
+# -------------------------------------------------- concatenated iterations
+
+def test_unroll_iterations_version_edges():
+    """Paper §4: frozen-model calls of iteration t+1 may overlap iteration
+    t's training; trainable-model calls must wait for their model's update."""
+    from repro.core.dfg import unroll_iterations
+    dfg = ppo_graph()
+    g2 = unroll_iterations(dfg, 2)
+    assert len(g2.calls) == 12
+    ref1 = g2.by_name["ref_inf@1"]
+    gen1 = g2.by_name["actor_gen@1"]
+    parents_ref1 = {p.name for p in g2.parents(ref1)}
+    parents_gen1 = {p.name for p in g2.parents(gen1)}
+    # frozen reward/ref: no dependency on actor_train@0
+    assert "actor_train@0" not in parents_ref1
+    # the actor's generation at t+1 waits for its parameter version from t
+    assert "actor_train@0" in parents_gen1
+    # topological order exists (no cycles)
+    assert len(g2.topo_order()) == 12
+
+
+def test_pipelined_steady_state_not_worse():
+    """Steady-state per-iteration time is never worse than the 1-iteration
+    makespan (overlap can only help)."""
+    from repro.core.dfg import unroll_iterations
+    from repro.core.search import plan_cost, heuristic_plan
+    dfg = ppo_graph()
+    cost = CostModel(CLUSTER)
+    hp = heuristic_plan(dfg, CLUSTER, cost)
+    u = unroll_iterations(dfg, 3)
+    _, t1, _ = plan_cost(dfg, hp, cost, CLUSTER.chip.hbm_bytes)
+    _, tk, _ = plan_cost(dfg, hp, cost, CLUSTER.chip.hbm_bytes, unrolled=u, k=3)
+    assert tk <= t1 * 1.0001

@@ -1,0 +1,109 @@
+"""Profiler calibration, HLO collective parser, serve bucketing."""
+
+import jax
+import numpy as np
+
+from repro import hw
+from repro.configs import ARCHS
+from repro.core.plan import Cluster
+from repro.core.profiler import ProfileTable, calibrate, profile_model
+from repro.launch.roofline import (CollectiveStats, RooflineTerms,
+                                   parse_collectives, model_flops)
+from repro.launch.serve import BatchServer, bucket_of
+
+
+def test_profiler_measures_and_calibrates():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    table = profile_model(cfg, batches=(2,), seqs=(16, 32))
+    assert len(table.entries) == 4
+    assert all(t > 0 for t in table.entries.values())
+    # interpolation between grid points
+    mid = table.lookup("train", 2, 24)
+    lo = table.entries[("train", 2, 16)]
+    hi = table.entries[("train", 2, 32)]
+    assert min(lo, hi) * 0.5 <= mid <= max(lo, hi) * 1.5
+    cpu = hw.ChipSpec(name="cpu", peak_flops_bf16=5e10, hbm_bytes=8e9,
+                      hbm_bw=2e10, ici_link_bw=1e9)
+    prof = calibrate(cfg, table, Cluster(1, 1, chip=cpu))
+    assert prof.compute_scale > 0
+
+
+HLO = """
+HloModule test, is_scheduled=true
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %p = (s32[], f32[16,128]) parameter(0)
+  %g = f32[16,128]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[16,128]{1,0} all-reduce(%g), replica_groups={{0,1,2,3}}, to_apply=%add
+  %i = s32[] constant(1)
+  ROOT %t = (s32[], f32[16,128]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[16,128])) -> pred[] {
+  %p = (s32[], f32[16,128]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(10)
+  ROOT %lt = pred[] compare(%iv, %k), direction=LT
+}
+
+ENTRY %main (x: f32[16,128]) -> f32[16,128] {
+  %x = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %sl = f32[16,128]{1,0} slice(%ag), slice={[0:16],[0:128]}
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %o = f32[16,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collectives_trip_counts_and_bytes():
+    stats = parse_collectives(HLO)
+    # the loop body's all-reduce runs 10 times; entry all-gather once
+    assert stats.counts["all-reduce"] == 10
+    assert stats.counts["all-gather"] == 1
+    ar_payload = 16 * 128 * 4
+    np.testing.assert_allclose(
+        stats.wire_bytes_by_kind["all-reduce"],
+        10 * hw.all_reduce_bytes(ar_payload, 4))
+    ag_payload = 64 * 128 * 4  # full gathered result
+    np.testing.assert_allclose(
+        stats.wire_bytes_by_kind["all-gather"],
+        hw.all_gather_bytes(ag_payload, 4))
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(flops=197e12, hbm_bytes=819e9 / 2,
+                      wire_bytes=50e9 / 4, chip=hw.V5E,
+                      model_flops_total=197e12 / 2, n_chips=1)
+    assert t.compute_s == 1.0
+    assert t.memory_s == 0.5
+    assert t.collective_s == 0.25
+    assert t.dominant == "compute"
+    assert t.useful_ratio == 0.5
+    assert t.roofline_fraction == 0.5
+
+
+def test_model_flops_definitions():
+    cfg = ARCHS["granite-moe-1b-a400m"]
+    n_act = cfg.active_param_count()
+    assert model_flops(cfg, "train", 4, 128) == 6.0 * n_act * 4 * 128
+    assert model_flops(cfg, "prefill", 4, 128) == 2.0 * n_act * 4 * 128
+    assert model_flops(cfg, "decode", 4, 128) == 2.0 * n_act * 4
+
+
+def test_serve_bucketing_preserves_order():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchServer(cfg, params, max_new=4)
+    rng = np.random.default_rng(1)
+    prompts = [np.asarray(rng.integers(1, cfg.vocab_size, n), np.int32)
+               for n in (5, 30, 9, 17)]
+    out = server.serve(prompts, jax.random.PRNGKey(1))
+    assert len(out) == 4
+    assert all(len(o) == 4 for o in out)
+    assert bucket_of(5) == 16 and bucket_of(17) == 32 and bucket_of(30) == 32
