@@ -93,6 +93,7 @@ class _Memo:
 
 
 _MEMO = _Memo()
+_MEMO_CAP = 8192
 
 
 def remap_schedule(cfg: ModelConfig, src: Assignment, dst: Assignment,
@@ -110,8 +111,11 @@ def remap_schedule(cfg: ModelConfig, src: Assignment, dst: Assignment,
         out = _remap_cost_fast(cfg, src, dst, cluster)
     else:
         out = _remap_schedule(cfg, src, dst, cluster)
-    if len(_MEMO.cache) > 8192:
-        _MEMO.cache.clear()
+    if len(_MEMO.cache) > _MEMO_CAP:
+        # evict the oldest half (dict preserves insertion order) so the MCMC
+        # search keeps its hot working set instead of losing it to a clear()
+        for old in list(_MEMO.cache)[:len(_MEMO.cache) // 2]:
+            del _MEMO.cache[old]
     _MEMO.cache[key] = out
     return out
 

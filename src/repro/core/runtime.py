@@ -10,6 +10,16 @@ meshes serialize; disjoint meshes dispatch concurrently — on a real fleet the
 async dispatch becomes requests to per-host processes via jax.distributed,
 and on CPU it degrades gracefully to sequential execution).
 
+Reallocation overlap (paper §6, Fig. 6): every model gets a *prefetch chain*
+— an asyncio task that walks the model's calls in dataflow order and kicks
+off the next call's reallocation the moment the previous call on that model
+finishes, i.e. as soon as the model's mesh is free and before the call's
+device locks are taken.  The reshard's collectives then run underneath
+whatever other calls are computing; by the time the call itself reaches
+``_maybe_reallocate`` the transfer is usually done and it records a
+*prefetch hit* (``CallRecord.prefetch_hit``, ``stats()["prefetch_hits"]``)
+with only the residual wait on the clock instead of the full transfer.
+
 Fault-tolerance hooks:
   * per-call deadline = straggler_factor x estimator time; breaches invoke
     ``on_straggler`` (default: log + re-dispatch once)
@@ -40,6 +50,8 @@ class ModelState:
     opt_state: Any = None
     assignment: Optional[Assignment] = None
     version: int = 0
+    # in-flight prefetched reallocation: (target assignment, ReshardTask)
+    prefetch: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -50,6 +62,7 @@ class CallRecord:
     realloc_s: float
     straggled: bool = False
     retried: bool = False
+    prefetch_hit: bool = False
 
 
 class RuntimeEngine:
@@ -58,11 +71,13 @@ class RuntimeEngine:
                  *, cost_model: Optional[CostModel] = None,
                  sharding_for: Optional[Callable] = None,
                  straggler_factor: float = 10.0,
-                 on_straggler: Optional[Callable] = None):
+                 on_straggler: Optional[Callable] = None,
+                 prefetch_realloc: bool = True):
         """``executors[name](model_state, inputs: dict) -> dict`` runs one
         call; TRAIN executors mutate model_state.params/opt_state in place.
         ``sharding_for(model_name, assignment)`` -> dst sharding tree (or
-        None to skip physical resharding, e.g. single-device tests)."""
+        None to skip physical resharding, e.g. single-device tests).
+        ``prefetch_realloc`` enables the overlapped-reallocation chains."""
         self.dfg = dfg
         self.plan = plan
         self.executors = executors
@@ -71,28 +86,119 @@ class RuntimeEngine:
         self.sharding_for = sharding_for
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler or (lambda *a: None)
+        self.prefetch_realloc = prefetch_realloc
         self.records: list[CallRecord] = []
         m = plan.cluster.devs_per_node
         self._dev_locks: dict[int, asyncio.Lock] = {}
+        self._model_locks: dict[str, asyncio.Lock] = {}
+        self._model_users: dict[str, int] = {}
+        self._model_idle: dict[str, asyncio.Condition] = {}
         self._mesh_devs = {
             c.name: sorted(plan.assignments[c.name].mesh.devices(m))
             for c in dfg.calls}
 
     # ------------------------------------------------------------- realloc
-    def _maybe_reallocate(self, call: FunctionCall) -> float:
-        """Move the call's model to its planned assignment.  Returns secs."""
+    def _model_call_chains(self) -> dict[str, list[FunctionCall]]:
+        """Each model's calls in dataflow (topological) order — the order in
+        which its parameters visit assignments within an iteration."""
+        chains: dict[str, list[FunctionCall]] = {}
+        for call in self.dfg.topo_order():
+            chains.setdefault(call.model_name, []).append(call)
+        return chains
+
+    # -- same-model exclusion: a donating reshard must never run while an
+    # -- executor of the same model is computing on the current buffers
+    def _begin_use(self, model_name: str):
+        self._model_users[model_name] = self._model_users.get(model_name,
+                                                              0) + 1
+
+    async def _end_use(self, model_name: str):
+        self._model_users[model_name] -= 1
+        cond = self._model_idle.setdefault(model_name, asyncio.Condition())
+        async with cond:
+            cond.notify_all()
+
+    async def _await_model_idle(self, model_name: str):
+        cond = self._model_idle.setdefault(model_name, asyncio.Condition())
+        async with cond:
+            await cond.wait_for(
+                lambda: self._model_users.get(model_name, 0) == 0)
+
+    async def _prefetch_for(self, call: FunctionCall):
+        """Dispatch the reallocation for ``call`` ahead of its execution.
+
+        Runs with the model lock held so it never races the synchronous
+        path in ``_maybe_reallocate``; the actual transfer proceeds in the
+        background after dispatch (JAX arrays are futures)."""
+        st = self.models[call.model_name]
+        target = self.plan.assignments[call.name]
+        if st.assignment == target or self.sharding_for is None:
+            return
+        async with self._model_locks[call.model_name]:
+            if st.assignment == target or st.prefetch is not None:
+                return
+            dst = self.sharding_for(call.model_name, target)
+            if dst is None:
+                return
+            await self._await_model_idle(call.model_name)
+            from repro.parallel import realloc_exec
+            loop = asyncio.get_running_loop()
+            params = st.params
+
+            def dispatch():
+                task = realloc_exec.prefetch_reshard(params, dst)
+                # commit in-thread, atomically with the donation: even if
+                # the awaiting chain is cancelled mid-await, st.params
+                # never dangles on donated buffers
+                st.params = task.tree
+                return task
+
+            task = await loop.run_in_executor(None, dispatch)
+            st.prefetch = (target, task)
+
+    async def _prefetch_chain(self, calls: list[FunctionCall],
+                              done: dict[str, asyncio.Event]):
+        """Walk one model's calls in order; prefetch each call's realloc as
+        soon as the previous call on the model has released its mesh."""
+        prev = None
+        for call in calls:
+            if prev is not None:
+                await done[prev.name].wait()
+            try:
+                await self._prefetch_for(call)
+            except Exception:  # noqa: BLE001 — best-effort; sync path redoes it
+                pass
+            prev = call
+
+    async def _maybe_reallocate(self, call: FunctionCall) -> tuple[float, bool]:
+        """Move the call's model to its planned assignment.
+        Returns (seconds on the critical path, prefetch_hit)."""
         st = self.models[call.model_name]
         target = self.plan.assignments[call.name]
         if st.assignment == target:
-            return 0.0
-        t0 = time.monotonic()
-        if self.sharding_for is not None:
-            dst = self.sharding_for(call.model_name, target)
-            if dst is not None:
-                from repro.parallel import realloc_exec
-                st.params = realloc_exec.reshard(st.params, dst)
-        st.assignment = target
-        return time.monotonic() - t0
+            return 0.0, False
+        async with self._model_locks.setdefault(call.model_name,
+                                                asyncio.Lock()):
+            t0 = time.monotonic()
+            loop = asyncio.get_running_loop()
+            if st.prefetch is not None:
+                pf_target, pf_task = st.prefetch
+                st.prefetch = None
+                if pf_target == target:
+                    # only the residual wait is on the critical path
+                    await loop.run_in_executor(None, pf_task.wait)
+                    st.assignment = target
+                    return time.monotonic() - t0, True
+            if self.sharding_for is not None:
+                dst = self.sharding_for(call.model_name, target)
+                if dst is not None:
+                    await self._await_model_idle(call.model_name)
+                    from repro.parallel import realloc_exec
+                    params = st.params
+                    st.params = await loop.run_in_executor(
+                        None, lambda: realloc_exec.reshard(params, dst))
+            st.assignment = target
+            return time.monotonic() - t0, False
 
     # ------------------------------------------------------------- dispatch
     async def _locks_for(self, name: str):
@@ -111,7 +217,7 @@ class RuntimeEngine:
         for lk in locks:  # deterministic (device-id) order: no deadlock
             await lk.acquire()
         try:
-            realloc_s = self._maybe_reallocate(call)
+            realloc_s, prefetch_hit = await self._maybe_reallocate(call)
             deadline = None
             if self.cost is not None:
                 deadline = self.straggler_factor * self.cost.call_time(
@@ -119,17 +225,24 @@ class RuntimeEngine:
             t0 = time.monotonic()
             inputs = {k: data[k] for k in call.inputs if k in data}
             loop = asyncio.get_running_loop()
+
+            async def execute():
+                self._begin_use(call.model_name)
+                try:
+                    return await loop.run_in_executor(
+                        None, lambda: self.executors[call.name](
+                            self.models[call.model_name], inputs))
+                finally:
+                    await self._end_use(call.model_name)
+
             try:
-                out = await loop.run_in_executor(
-                    None, lambda: self.executors[call.name](
-                        self.models[call.model_name], inputs))
+                out = await execute()
                 retried = False
             except Exception:  # noqa: BLE001 — single retry after re-realloc
                 self.models[call.model_name].assignment = None
-                self._maybe_reallocate(call)
-                out = await loop.run_in_executor(
-                    None, lambda: self.executors[call.name](
-                        self.models[call.model_name], inputs))
+                self.models[call.model_name].prefetch = None
+                await self._maybe_reallocate(call)
+                out = await execute()
                 retried = True
             t1 = time.monotonic()
             straggled = deadline is not None and (t1 - t0) > deadline
@@ -139,7 +252,7 @@ class RuntimeEngine:
                 self.models[call.model_name].version += 1
             data.update(out or {})
             self.records.append(CallRecord(call.name, t0, t1, realloc_s,
-                                           straggled, retried))
+                                           straggled, retried, prefetch_hit))
         finally:
             for lk in reversed(locks):
                 lk.release()
@@ -147,14 +260,28 @@ class RuntimeEngine:
 
     async def _run_iteration_async(self, data: dict) -> dict:
         done = {c.name: asyncio.Event() for c in self.dfg.calls}
-        await asyncio.gather(*(self._run_call(c, data, done)
-                               for c in self.dfg.calls))
+        prefetchers = []
+        if self.prefetch_realloc and self.sharding_for is not None:
+            prefetchers = [
+                asyncio.create_task(self._prefetch_chain(calls, done))
+                for calls in self._model_call_chains().values()]
+        try:
+            await asyncio.gather(*(self._run_call(c, data, done)
+                                   for c in self.dfg.calls))
+        finally:
+            for t in prefetchers:
+                t.cancel()
+            if prefetchers:
+                await asyncio.gather(*prefetchers, return_exceptions=True)
         return data
 
     def run_iteration(self, initial_data: dict) -> dict:
         """Execute one full dataflow-graph iteration; returns the data pool."""
         data = dict(initial_data)
         self._dev_locks = {}  # locks bind to the event loop of each run
+        self._model_locks = {m: asyncio.Lock() for m in self.models}
+        self._model_users = {m: 0 for m in self.models}
+        self._model_idle = {}
         return asyncio.run(self._run_iteration_async(data))
 
     # ------------------------------------------------------------ elasticity
@@ -171,11 +298,19 @@ class RuntimeEngine:
         if not self.records:
             return {}
         t0 = min(r.start for r in self.records)
+        calls: dict[str, dict] = {}
+        for r in self.records:
+            agg = calls.setdefault(r.name, {"count": 0, "total_s": 0.0})
+            agg["count"] += 1
+            agg["total_s"] += r.end - r.start
+        for agg in calls.values():
+            agg["total_s"] = round(agg["total_s"], 4)
+            agg["mean_s"] = round(agg["total_s"] / agg["count"], 4)
         return {
             "wall_s": max(r.end for r in self.records) - t0,
             "realloc_s": sum(r.realloc_s for r in self.records),
             "stragglers": sum(r.straggled for r in self.records),
             "retries": sum(r.retried for r in self.records),
-            "calls": {r.name: round(r.end - r.start, 4)
-                      for r in self.records},
+            "prefetch_hits": sum(r.prefetch_hit for r in self.records),
+            "calls": calls,
         }

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 LANES = 128
 NEG_INF = -2.0**30
 
@@ -102,7 +104,7 @@ def flash_decode(q, k_cache, v_cache, *, cache_len, window=None, block_k=256,
             pltpu.VMEM((g, LANES), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qg, k_cache, v_cache)

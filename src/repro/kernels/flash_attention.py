@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 LANES = 128
 NEG_INF = -2.0**30
 
@@ -131,7 +133,7 @@ def flash_mha(q, k, v, *, causal=True, window=None, q_positions=None,
             pltpu.VMEM((block_q, LANES), jnp.float32),  # running denom
             pltpu.VMEM((block_q, d), jnp.float32),      # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

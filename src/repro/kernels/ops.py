@@ -12,6 +12,9 @@ meant to be called from inside an enclosing ``jax.jit``.
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
 from repro.kernels import ref
 
 # "stub" short-circuits attention (returns q): used by the dry-run's
@@ -48,6 +51,91 @@ def decode_mha(q, k_cache, v_cache, *, cache_len, window=None, impl="reference")
     return decode_attention.flash_decode(
         q, k_cache, v_cache, cache_len=cache_len, window=window,
         interpret=(impl == "pallas_interpret"))
+
+
+def _cdf_chunk(v: int) -> int:
+    """Largest power-of-two chunk <= 1024 that divides V (0 = no chunking)."""
+    k = 1024
+    while k > 1:
+        if v % k == 0 and v >= 2 * k:
+            return k
+        k //= 2
+    return 0
+
+
+def _sample_cdf(lg, key, temperature: float):
+    """Two-level inverse-CDF sample from logits (one uniform per row).
+
+    Avoids the full-vocab Gumbel field of ``jax.random.categorical`` (V
+    random bits per row) and the O(V) cumsum of a flat CDF: pass 1 reduces
+    exp-sums per chunk, the chunk CDF is tiny, and only the selected chunk
+    gets an exact intra-chunk cumsum.  Total (B, V) traffic ~2 read passes,
+    nothing vocab-sized written.  Returns (token, logsumexp(scaled))."""
+    b, v = lg.shape
+    scaled = lg if temperature == 1.0 else lg / max(temperature, 1e-6)
+    m = jnp.max(scaled, axis=-1, keepdims=True)
+    k = _cdf_chunk(v)
+    u01 = jax.random.uniform(key, (b, 1))
+    if k == 0:  # odd vocab sizes: flat CDF
+        c = jnp.cumsum(jnp.exp(scaled - m), axis=-1)
+        z = c[:, -1:]
+        tok = jnp.sum(c < u01 * z, axis=-1)
+        return (jnp.minimum(tok, v - 1).astype(jnp.int32),
+                m[:, 0] + jnp.log(z[:, 0]))
+    lgc = scaled.reshape(b, v // k, k)
+    chunk = jnp.sum(jnp.exp(lgc - m[:, :, None]), axis=-1)  # (B, V/k)
+    cchunk = jnp.cumsum(chunk, axis=-1)
+    z = cchunk[:, -1:]
+    u = u01 * z
+    ci = jnp.minimum(jnp.sum(cchunk < u, axis=-1), v // k - 1)
+    base = jnp.where(ci > 0,
+                     jnp.take_along_axis(
+                         cchunk, jnp.maximum(ci - 1, 0)[:, None], axis=-1)[:, 0],
+                     0.0)
+    sel = jnp.take_along_axis(lgc, ci[:, None, None], axis=1)[:, 0]  # (B, k)
+    cin = jnp.cumsum(jnp.exp(sel - m), axis=-1)
+    off = jnp.minimum(jnp.sum(base[:, None] + cin < u, axis=-1), k - 1)
+    tok = (ci * k + off).astype(jnp.int32)
+    return tok, m[:, 0] + jnp.log(z[:, 0])
+
+
+def sample_logits(logits, key=None, *, temperature: float = 1.0,
+                  sampler: str = "cdf", impl="reference"):
+    """Fused sampling + logprob extraction from decode logits.
+
+    logits: (B, V).  Returns (token (B,) int32, logprob (B,) f32) where the
+    logprob is under the *untempered* distribution (PPO convention).  The
+    fusion never materializes a (B, V) ``log_softmax``; greedy when ``key``
+    is None.
+
+    ``sampler`` picks the stochastic path:
+      - "cdf" (default): two-level inverse-CDF — one uniform per row, ~2
+        read passes over the logits.  The fast path; draws differ from
+        "gumbel" for the same key (both are exact samples).
+      - "gumbel": ``jax.random.categorical`` — bit-identical to the
+        pre-fusion decode loop, at the cost of a (B, V) Gumbel field.
+
+    All tiers share the jnp body — these are V-reductions XLA fuses into
+    the surrounding decode step on every backend, so the "pallas" tiers
+    dispatch here rather than to a dedicated kernel."""
+    _check(impl)
+    if sampler not in ("cdf", "gumbel"):
+        raise ValueError(f"sampler={sampler!r} not in ('cdf', 'gumbel')")
+    lg = logits.astype(jnp.float32)
+    lse = None
+    if key is None:
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    elif sampler == "cdf":
+        tok, lse_scaled = _sample_cdf(lg, key, temperature)
+        if temperature == 1.0:  # reuse the sampler's partition function
+            lse = lse_scaled
+    else:
+        scaled = lg if temperature == 1.0 else lg / max(temperature, 1e-6)
+        tok = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    if lse is None:
+        lse = jax.nn.logsumexp(lg, axis=-1)
+    lp = jnp.take_along_axis(lg, tok[:, None], axis=-1)[:, 0] - lse
+    return tok, lp
 
 
 def ssd(x, dt, a_log, b_mat, c_mat, d_vec, *, chunk, init_state=None,

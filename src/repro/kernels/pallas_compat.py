@@ -1,0 +1,13 @@
+"""Pallas TPU API compatibility across jax versions.
+
+Newer jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the pinned 0.4.x only has the former.  Import ``CompilerParams`` from here
+so every kernel lowers on either pin.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

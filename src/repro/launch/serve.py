@@ -17,10 +17,8 @@ import time
 
 
 def bucket_of(length: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
-    for b in buckets:
-        if length <= b:
-            return b
-    return buckets[-1]
+    from repro.models.model import bucket_len
+    return bucket_len(length, buckets)
 
 
 class BatchServer:

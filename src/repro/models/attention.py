@@ -105,10 +105,15 @@ def prefill_into_cache(cache, spec: LayerSpec, k, v, seq_len: int):
     """Write a full prefill's roped k/v into the cache (ring for window)."""
     cap = cache["k"].shape[1]
     if seq_len <= cap:
-        k_w, v_w, slots = k, v, jnp.arange(seq_len) % cap
-    else:
-        k_w, v_w = k[:, -cap:], v[:, -cap:]
-        slots = (jnp.arange(seq_len - cap, seq_len)) % cap
+        # contiguous prefix: a static slice-update, not a gather/scatter
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+        }
+    k_w, v_w = k[:, -cap:], v[:, -cap:]
+    slots = (jnp.arange(seq_len - cap, seq_len)) % cap
     return {
         "k": cache["k"].at[:, slots].set(k_w.astype(cache["k"].dtype)),
         "v": cache["v"].at[:, slots].set(v_w.astype(cache["v"].dtype)),

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -132,42 +133,212 @@ def decode_step(params, cfg: ModelConfig, token, caches, t, *,
     return logits, caches
 
 
+def decode_and_sample_step(params, cfg: ModelConfig, token, caches, t, key,
+                           *, temperature: float = 1.0, sampler: str = "cdf",
+                           impl="reference"):
+    """Fused decode + sample: one decode step on ``token`` followed by
+    sampling the *next* token and its logprob from the produced logits,
+    without materializing a full ``log_softmax`` (``ops.sample_logits``).
+    ``key=None`` means greedy.  Returns (next_token (B,), logprob (B,),
+    new_caches) — nothing vocab-sized escapes this function."""
+    logits, caches = decode_step(params, cfg, token, caches, t, impl=impl)
+    tok, lp = ops.sample_logits(logits, key, temperature=temperature,
+                                sampler=sampler, impl=impl)
+    return tok, lp, caches
+
+
 def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
-             rng=None, temperature: float = 1.0, impl="reference"):
+             rng=None, temperature: float = 1.0, impl="reference",
+             fused: bool = True, eos_id: int | None = None,
+             sampler: str = "cdf"):
     """Greedy/sampled autoregressive generation after a prefill.
 
     Returns dict with tokens (B, T_new), logprobs (B, T_new), caches.
     The decode loop is a single compiled ``lax.scan`` — the TPU analogue of
     the paper's CUDAGraph decode (no per-token dispatch).
+
+    With ``fused`` (the default) sampling and logprob extraction happen
+    inside the decode step, so the scan carries a (B,) token instead of a
+    (B, V) logits array, never recomputes ``log_softmax``, and skips the
+    seed loop's trailing wasted decode (the returned caches therefore do
+    not contain the last sampled token's KV — no consumer attends to it).
+    With ``sampler="gumbel"`` tokens and logprobs are identical to the
+    unfused path for the same ``rng``; the default ``"cdf"`` sampler draws
+    equally-exact samples far cheaper (one uniform per row instead of a
+    (B, V) Gumbel field — see ``ops.sample_logits``).  ``fused=False``
+    keeps the original loop for comparison.
+
+    With ``eos_id`` set (fused only), the scan is replaced by an
+    EOS-early-exit ``lax.while_loop``: once a row emits ``eos_id`` its
+    remaining tokens are forced to ``eos_id`` with logprob 0, and the loop
+    exits as soon as every row is done.  The result gains a ``gen_mask``
+    entry ((B, T_new) f32, 1.0 through each row's first EOS).
     """
+    if eos_id is not None and not fused:
+        raise ValueError("eos_id requires the fused decode loop "
+                         "(fused=True); the legacy loop has no EOS exit")
     prompt_len = batch["tokens"].shape[1]
     max_len = prompt_len + num_new_tokens
     last_h, caches = prefill(params, cfg, batch, max_len, impl=impl)
     logits0 = logits_of(params, cfg, last_h[:, None])[:, 0]
 
-    def sample(lg, key):
-        lg = lg / jnp.maximum(temperature, 1e-6)
-        if rng is None:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
-
-    def logp_of(lg, tok):
-        lp = jax.nn.log_softmax(lg, axis=-1)
-        return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
-
     keys = (jax.random.split(rng, num_new_tokens) if rng is not None
             else jnp.zeros((num_new_tokens, 2), jnp.uint32))
 
-    def body(carry, key):
-        logits, caches, t = carry
-        tok = sample(logits, key)
-        lp = logp_of(logits, tok)
-        new_logits, caches = decode_step(params, cfg, tok, caches, t, impl=impl)
-        return (new_logits, caches, t + 1), (tok, lp)
+    if not fused:
+        def sample(lg, key):
+            lg = lg / jnp.maximum(temperature, 1e-6)
+            if rng is None:
+                return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
-    (_, caches, _), (toks, lps) = jax.lax.scan(
-        body, (logits0, caches, jnp.int32(prompt_len)), keys)
-    return {"tokens": toks.T, "logprobs": lps.T, "caches": caches}
+        def logp_of(lg, tok):
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            return jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+
+        def body(carry, key):
+            logits, caches, t = carry
+            tok = sample(logits, key)
+            lp = logp_of(logits, tok)
+            new_logits, caches = decode_step(params, cfg, tok, caches, t,
+                                             impl=impl)
+            return (new_logits, caches, t + 1), (tok, lp)
+
+        (_, caches, _), (toks, lps) = jax.lax.scan(
+            body, (logits0, caches, jnp.int32(prompt_len)), keys)
+        return {"tokens": toks.T, "logprobs": lps.T, "caches": caches}
+
+    tok0, lp0 = ops.sample_logits(logits0, keys[0] if rng is not None else
+                                  None, temperature=temperature,
+                                  sampler=sampler, impl=impl)
+
+    if eos_id is None:
+        def body(carry, key):
+            tok, caches, t = carry
+            ntok, lp, caches = decode_and_sample_step(
+                params, cfg, tok, caches, t,
+                key if rng is not None else None,
+                temperature=temperature, sampler=sampler, impl=impl)
+            return (ntok, caches, t + 1), (ntok, lp)
+
+        (_, caches, _), (toks, lps) = jax.lax.scan(
+            body, (tok0, caches, jnp.int32(prompt_len)), keys[1:])
+        tokens = jnp.concatenate([tok0[None], toks], axis=0).T
+        logprobs = jnp.concatenate([lp0[None], lps], axis=0).T
+        return {"tokens": tokens, "logprobs": logprobs, "caches": caches}
+
+    # EOS-early-exit variant: fixed-shape (B, T) buffers, dynamic trip count
+    b = tok0.shape[0]
+    toks_buf = jnp.full((b, num_new_tokens), eos_id, jnp.int32)
+    lps_buf = jnp.zeros((b, num_new_tokens), jnp.float32)
+    toks_buf = toks_buf.at[:, 0].set(tok0)
+    lps_buf = lps_buf.at[:, 0].set(lp0)
+    state = (jnp.int32(1), tok0, tok0 == eos_id, caches, toks_buf, lps_buf)
+
+    def cond(s):
+        i, _, done, *_ = s
+        return jnp.logical_and(i < num_new_tokens, ~jnp.all(done))
+
+    def wbody(s):
+        i, tok, done, caches, tb, lb = s
+        key = keys[i] if rng is not None else None
+        ntok, lp, caches = decode_and_sample_step(
+            params, cfg, tok, caches, prompt_len + i - 1, key,
+            temperature=temperature, sampler=sampler, impl=impl)
+        ntok = jnp.where(done, eos_id, ntok)
+        lp = jnp.where(done, 0.0, lp)
+        tb = tb.at[:, i].set(ntok)
+        lb = lb.at[:, i].set(lp)
+        return (i + 1, ntok, done | (ntok == eos_id), caches, tb, lb)
+
+    _, _, _, caches, toks_buf, lps_buf = jax.lax.while_loop(cond, wbody, state)
+    is_eos = (toks_buf == eos_id).astype(jnp.int32)
+    after_eos = (jnp.cumsum(is_eos, axis=1) - is_eos) > 0
+    return {"tokens": toks_buf, "logprobs": lps_buf, "caches": caches,
+            "gen_mask": 1.0 - after_eos.astype(jnp.float32)}
+
+
+# ----------------------------------------------------------- bucketed jit
+
+GEN_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def bucket_len(n: int, buckets=GEN_BUCKETS) -> int:
+    """Smallest bucket >= n; lengths beyond the largest bucket get their
+    own exact-size program (never truncated or negative-padded)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return n
+
+
+class BucketedGenerator:
+    """Length-bucketed jit cache over :func:`generate`.
+
+    Variable-length prompt batches (e.g. ``data/synth.PromptDataset`` with
+    ``min_len < prompt_len``) retrigger XLA compilation on every new
+    (prompt_len, gen_len) pair when jitted naively.  This wrapper left-pads
+    prompts to the next prompt-length bucket (left, so the final prompt
+    token stays adjacent to generation — same convention as
+    ``launch/serve.BatchServer``), rounds ``num_new_tokens`` up to its
+    bucket, and keeps one compiled program per (prompt_bucket, gen_bucket,
+    sampled?) key.  Outputs are trimmed back to the requested length.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, temperature: float = 1.0,
+                 impl: str = "reference", fused: bool = True,
+                 eos_id: int | None = None, pad_id: int = 0,
+                 sampler: str = "cdf", buckets=GEN_BUCKETS):
+        if cfg.prefix_len and cfg.family != "encdec":
+            # left-padding tokens would shift them out from under the
+            # prefix_embeds splice (positions [0:prefix_len])
+            raise ValueError("BucketedGenerator does not support prefix "
+                             "(vlm) configs; pad prompts upstream instead")
+        self.cfg, self.temperature, self.impl = cfg, temperature, impl
+        self.fused, self.eos_id, self.pad_id = fused, eos_id, pad_id
+        self.sampler = sampler
+        self.buckets = buckets
+        self._fns: dict = {}
+        self.compiles = 0
+        self.hits = 0
+
+    def _fn(self, prompt_bucket: int, gen_bucket: int, sampled: bool):
+        key = (prompt_bucket, gen_bucket, sampled)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.compiles += 1
+
+            def run(p, b, k):
+                return generate(p, self.cfg, b, num_new_tokens=gen_bucket,
+                                rng=(k if sampled else None),
+                                temperature=self.temperature, impl=self.impl,
+                                fused=self.fused, eos_id=self.eos_id,
+                                sampler=self.sampler)
+
+            fn = self._fns[key] = jax.jit(run)
+        else:
+            self.hits += 1
+        return fn
+
+    def __call__(self, params, batch, *, num_new_tokens: int, rng=None):
+        toks = batch["tokens"]
+        plen = toks.shape[1]
+        pb = bucket_len(plen, self.buckets)
+        gb = bucket_len(num_new_tokens, self.buckets)
+        if pb != plen:
+            pad = jnp.full((toks.shape[0], pb - plen), self.pad_id, toks.dtype)
+            batch = dict(batch, tokens=jnp.concatenate([pad, toks], axis=1))
+        out = self._fn(pb, gb, rng is not None)(
+            params, batch, rng if rng is not None
+            else jax.random.PRNGKey(0))
+        trimmed = {k: (v[:, :num_new_tokens]
+                       if k in ("tokens", "logprobs", "gen_mask") else v)
+                   for k, v in out.items()}
+        return trimmed
+
+    def stats(self) -> dict:
+        return {"compiles": self.compiles, "hits": self.hits,
+                "programs": len(self._fns)}
 
 
 # ----------------------------------------------------------------- specs

@@ -5,19 +5,32 @@ The schedule model lives in ``core/realloc.py`` (the paper's Fig. 6
 algorithm); execution defers to XLA: a jitted identity with
 ``out_shardings=dst`` lowers to the minimal collective-permute /
 all-gather/dynamic-slice program on ICI.  Same-mesh reshards happen fully
-on-device; cross-mesh moves (disjoint device sets) go through
-``jax.device_put``, which uses ICI/DCN transfers on real fleets.
+on-device and *donate* the source leaves, so XLA may reuse the source
+buffers in place (zero-copy for unchanged leaves, no doubled peak memory
+for moved ones).  Cross-mesh moves (disjoint device sets) go through one
+batched ``jax.device_put`` over the whole tree, which coalesces the
+per-leaf transfers into a single dispatch (ICI/DCN on real fleets).
+
+``prefetch_reshard`` exposes the asynchronous dispatch: it returns a
+``ReshardTask`` immediately while the collectives run under whatever
+computation the caller overlaps them with (paper §6: reallocation hidden
+behind the critical path).  ``core/runtime.RuntimeEngine`` uses it to kick
+off a call's reallocation as soon as the model's mesh is free.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
+import warnings
+from typing import Any
 
 import jax
 
 
 @functools.lru_cache(maxsize=64)
-def _reshard_fn(treedef, src_shardings, dst_shardings):
+def _reshard_fn(treedef, src_shardings, dst_shardings, donate):
     def identity(tree):
         return tree
 
@@ -25,25 +38,76 @@ def _reshard_fn(treedef, src_shardings, dst_shardings):
                    in_shardings=(jax.tree.unflatten(treedef,
                                                     list(src_shardings)),),
                    out_shardings=jax.tree.unflatten(treedef,
-                                                    list(dst_shardings)))
+                                                    list(dst_shardings)),
+                   donate_argnums=(0,) if donate else ())
 
 
-def reshard(tree, dst_sharding_tree):
-    """Reallocate ``tree`` to the shardings in ``dst_sharding_tree``.
-
-    Uses a cached jitted identity when src/dst meshes share devices (pure
-    collective program); falls back to device_put otherwise."""
+def _plan(tree, dst_sharding_tree):
     leaves, treedef = jax.tree.flatten(tree)
     dst = jax.tree.leaves(dst_sharding_tree)
     src = [l.sharding if hasattr(l, "sharding") else None for l in leaves]
     same_devices = all(
         getattr(s, "device_set", None) == getattr(d, "device_set", "x")
         for s, d in zip(src, dst))
+    return leaves, treedef, src, dst, same_devices
+
+
+def reshard(tree, dst_sharding_tree, *, donate: bool = True):
+    """Reallocate ``tree`` to the shardings in ``dst_sharding_tree``.
+
+    Uses a cached jitted identity when src/dst meshes share devices (pure
+    collective program).  With ``donate`` (the default) the source leaves
+    are donated to that program: leaves whose sharding is unchanged alias
+    their buffers and moved leaves are rewritten in place, so the caller
+    must not reuse ``tree`` afterwards.  Cross-mesh falls back to a single
+    batched ``jax.device_put`` over the whole tree."""
+    leaves, treedef, src, dst, same_devices = _plan(tree, dst_sharding_tree)
     if same_devices and all(s is not None for s in src):
-        fn = _reshard_fn(treedef, tuple(src), tuple(dst))
-        return fn(tree)
-    return jax.tree.unflatten(
-        treedef, [jax.device_put(l, d) for l, d in zip(leaves, dst)])
+        fn = _reshard_fn(treedef, tuple(src), tuple(dst), bool(donate))
+        with warnings.catch_warnings():
+            # donation is best-effort: leaves XLA can't alias fall back to
+            # a copy, which is exactly the pre-donation behaviour
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return fn(tree)
+    return jax.device_put(jax.tree.unflatten(treedef, leaves),
+                          jax.tree.unflatten(treedef, list(dst)))
+
+
+@dataclasses.dataclass
+class ReshardTask:
+    """Handle to an asynchronously dispatched reshard.
+
+    ``tree`` holds the destination arrays immediately (JAX arrays are
+    futures); the collectives complete in the background.  ``wait()``
+    blocks until they land and returns the tree; ``done()`` polls."""
+
+    tree: Any
+    dispatched_at: float
+
+    def done(self) -> bool:
+        for leaf in jax.tree.leaves(self.tree):
+            ready = getattr(leaf, "is_ready", None)
+            if ready is not None and not ready():
+                return False
+        return True
+
+    def wait(self):
+        jax.block_until_ready(self.tree)
+        return self.tree
+
+
+def prefetch_reshard(tree, dst_sharding_tree, *,
+                     donate: bool = True) -> ReshardTask:
+    """Kick off ``reshard`` without blocking on the transfer.
+
+    Returns a :class:`ReshardTask` whose ``tree`` is valid to hand to any
+    later computation (XLA serializes on the data dependency); callers that
+    need the realloc off the critical path simply dispatch this early and
+    ``wait()`` (usually a no-op) right before use.  As with ``reshard``,
+    ``donate=True`` invalidates the source tree."""
+    out = reshard(tree, dst_sharding_tree, donate=donate)
+    return ReshardTask(out, time.monotonic())
 
 
 def realloc_bytes(tree) -> int:

@@ -23,6 +23,7 @@ from repro.core.estimator import CostModel, Profile
 from repro.core.plan import Cluster, ExecutionPlan
 from repro.core.runtime import ModelState, RuntimeEngine
 from repro.core.search import heuristic_plan, mcmc_search
+from repro.kernels import ops as OPS
 from repro.models import model as MDL
 from repro.optim import adamw
 from repro.rlhf import ppo as PPO
@@ -41,6 +42,13 @@ class ExperimentConfig:
     opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
     search_iters: int = 300
     impl: str = "reference"
+    # rollout-only kernel tier ("pallas" routes the decode loop through
+    # kernels/ops.decode_mha -> Pallas flash_decode while training stays on
+    # ``impl``); None inherits ``impl``.
+    rollout_impl: Optional[str] = None
+    fused_sampling: bool = True  # fused decode+sample rollout hot path
+    eos_id: Optional[int] = None  # enables EOS-early-exit generation
+    sampler: str = "cdf"  # "cdf" (fast) or "gumbel" (seed-identical draws)
 
 
 class RLHFExperiment:
@@ -91,10 +99,16 @@ class RLHFExperiment:
         hp = exp.ppo
         gen_start = exp.prompt_len
         impl = exp.impl
+        rollout_impl = exp.rollout_impl or impl
+        for tier in (impl, rollout_impl):
+            if tier not in OPS.IMPLS:
+                raise ValueError(f"impl={tier!r} not in {OPS.IMPLS}")
         rng = jax.random.PRNGKey(exp.seed + 1)
 
         gen_fn = jax.jit(lambda p, b, k: MDL.generate(
-            p, a_cfg, b, num_new_tokens=exp.gen_len, rng=k, impl=impl))
+            p, a_cfg, b, num_new_tokens=exp.gen_len, rng=k,
+            impl=rollout_impl, fused=exp.fused_sampling, eos_id=exp.eos_id,
+            sampler=exp.sampler))
         ref_fn = jax.jit(lambda p, toks: PPO.sequence_logprobs(
             p, a_cfg, toks, gen_start, impl=impl, remat=False))
         rew_fn = jax.jit(lambda p, toks, m: RWD.score_sequences(
@@ -113,7 +127,7 @@ class RLHFExperiment:
             out = gen_fn(ms.params, inputs["prompts"], k)
             toks = jnp.concatenate([inputs["prompts"]["tokens"],
                                     out["tokens"]], axis=1)
-            mask = jnp.ones_like(out["logprobs"])
+            mask = out.get("gen_mask", jnp.ones_like(out["logprobs"]))
             return {"seq": toks, "logp": out["logprobs"], "gen_mask": mask}
 
         def reward_inf(ms, inputs):

@@ -1,0 +1,187 @@
+"""Reallocation fast path: donated same-mesh reshard, batched cross-mesh
+fallback, runtime realloc prefetch, stats aggregation, memo eviction."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core import realloc
+from repro.core.runtime import CallRecord, RuntimeEngine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 4, timeout=420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_donated_reshard_matches_undonated():
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.realloc_exec import reshard
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
+
+        def tree():
+            return {"w": jax.device_put(x, NamedSharding(mesh, P("data", "model"))),
+                    "b": jax.device_put(x[:, 0], NamedSharding(mesh, P("data")))}
+
+        dst = {"w": NamedSharding(mesh, P("model", None)),
+               "b": NamedSharding(mesh, P(None))}
+        a = reshard(tree(), dst, donate=True)
+        b = reshard(tree(), dst, donate=False)
+        for k in ("w", "b"):
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+            assert a[k].sharding == b[k].sharding
+        np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(x))
+        assert a["w"].sharding.spec == P("model", None)
+        print("DONATE_OK")
+    """)
+    assert "DONATE_OK" in out
+
+
+def test_batched_cross_mesh_fallback_preserves_values():
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.parallel.realloc_exec import reshard
+
+        devs = jax.devices()
+        m1 = Mesh(np.array(devs[:2]), ("model",))
+        m2 = Mesh(np.array(devs[2:]), ("model",))
+        x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
+        tree = {"w": jax.device_put(x, NamedSharding(m1, P("model", None))),
+                "b": jax.device_put(x[:, 0], NamedSharding(m1, P("model")))}
+        dst = {"w": NamedSharding(m2, P(None, "model")),
+               "b": NamedSharding(m2, P(None))}
+        out = reshard(tree, dst)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(out["b"]), np.asarray(x[:, 0]))
+        assert out["w"].sharding.device_set == set(devs[2:])
+        print("CROSS_MESH_OK")
+    """)
+    assert "CROSS_MESH_OK" in out
+
+
+def test_runtime_records_realloc_prefetch_hit():
+    out = run_with_devices("""
+        import time
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.dfg import (DataflowGraph, FunctionCall, GENERATE,
+                                    INFERENCE, Workload)
+        from repro.core.plan import (Assignment, Cluster, DeviceMesh,
+                                     ExecutionPlan, ParallelStrategy)
+        from repro.core.runtime import ModelState, RuntimeEngine
+
+        cluster = Cluster(n_nodes=1, devs_per_node=4)
+        w = Workload(batch=4, prompt_len=8, gen_len=8)
+        calls = [
+            FunctionCall("gen", "actor", GENERATE, None, w,
+                         inputs=("prompts",), outputs=("seq",)),
+            FunctionCall("other", "aux", INFERENCE, None, w,
+                         inputs=("seq",), outputs=("x",)),
+            FunctionCall("train", "actor", INFERENCE, None, w,
+                         inputs=("x",), outputs=("y",)),
+        ]
+        dfg = DataflowGraph(calls, "toy")
+        mesh_all = DeviceMesh(0, 1, 0, 4)
+        plan = ExecutionPlan({
+            "gen": Assignment(mesh_all, ParallelStrategy(4, 1, 1, 1)),
+            "other": Assignment(mesh_all, ParallelStrategy(4, 1, 1, 1)),
+            "train": Assignment(mesh_all, ParallelStrategy(2, 2, 1, 1)),
+        }, cluster)
+
+        jmesh = jax.make_mesh((2, 2), ("data", "model"))
+        src = NamedSharding(jmesh, P("data", None))
+        dst = NamedSharding(jmesh, P("model", "data"))
+
+        def sharding_for(model_name, asg):
+            if model_name != "actor":
+                return None
+            return {"w": dst if asg.strategy.tp == 2 else src}
+
+        params = {"w": jax.device_put(jnp.ones((512, 512)), src)}
+        models = {"actor": ModelState(params,
+                                      assignment=plan.assignments["gen"]),
+                  "aux": ModelState({"z": jnp.zeros(())})}
+
+        def ex_train(ms, inputs):
+            assert ms.params["w"].sharding.spec == P("model", "data")
+            return {"y": float(jnp.sum(ms.params["w"]))}
+
+        executors = {"gen": lambda ms, i: {"seq": 1},
+                     "other": lambda ms, i: (time.sleep(0.3), {"x": 2})[1],
+                     "train": ex_train}
+        eng = RuntimeEngine(dfg, plan, executors, models,
+                            sharding_for=sharding_for)
+        out = eng.run_iteration({"prompts": 0})
+        st = eng.stats()
+        assert out["y"] == 512 * 512, out["y"]
+        assert st["prefetch_hits"] >= 1, st
+        print("PREFETCH_HIT_OK", st["prefetch_hits"])
+    """)
+    assert "PREFETCH_HIT_OK" in out
+
+
+def test_stats_aggregates_repeated_calls():
+    """Repeated/retried records for one call name must aggregate, not
+    overwrite."""
+    eng = RuntimeEngine.__new__(RuntimeEngine)
+    eng.records = [CallRecord("a", 0.0, 1.0, 0.0),
+                   CallRecord("a", 2.0, 2.5, 0.0, retried=True),
+                   CallRecord("b", 0.0, 0.25, 0.1, prefetch_hit=True)]
+    st = eng.stats()
+    assert st["calls"]["a"]["count"] == 2
+    assert abs(st["calls"]["a"]["total_s"] - 1.5) < 1e-6
+    assert abs(st["calls"]["a"]["mean_s"] - 0.75) < 1e-6
+    assert st["calls"]["b"]["count"] == 1
+    assert st["retries"] == 1
+    assert st["prefetch_hits"] == 1
+
+
+def test_remap_memo_evicts_oldest_half(monkeypatch):
+    from repro import hw
+    from repro.configs.llama import LLAMA_7B
+    from repro.core.plan import (Assignment, Cluster, DeviceMesh,
+                                 ParallelStrategy)
+
+    cluster = Cluster(n_nodes=1, devs_per_node=8, chip=hw.H100,
+                      intra_node_bw=450e9, inter_node_bw=50e9)
+    mesh = DeviceMesh(0, 1, 0, 8)
+    src = Assignment(mesh, ParallelStrategy(8, 1, 1, 1))
+
+    def dst(i):
+        return Assignment(mesh, ParallelStrategy(8, 1, 1, i + 1))
+
+    monkeypatch.setattr(realloc, "_MEMO_CAP", 4)
+    memo = realloc._MEMO.cache
+    saved = dict(memo)
+    memo.clear()
+    try:
+        for i in range(6):
+            realloc.remap_schedule(LLAMA_7B, src, dst(i), cluster)
+        # cap=4: inserting the 5th and 6th entries each evicted the oldest
+        # half first — the newest entries must survive, the oldest must not
+        keys = list(memo)
+        assert len(memo) <= realloc._MEMO_CAP + 1
+        assert (LLAMA_7B.name, src, dst(5), 1, 8) in memo
+        assert (LLAMA_7B.name, src, dst(0), 1, 8) not in memo
+        # a surviving entry is still a cache hit (same object back)
+        again = realloc.remap_schedule(LLAMA_7B, src, dst(5), cluster)
+        assert again is memo[(LLAMA_7B.name, src, dst(5), 1, 8)]
+        assert list(memo) == keys  # the hit did not reinsert/evict
+    finally:
+        memo.clear()
+        memo.update(saved)

@@ -1,0 +1,231 @@
+"""Fused rollout sampling hot path: fused/legacy parity, CDF sampler
+correctness, EOS early exit, length-bucketed jit cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.kernels import ops
+from repro.models.model import (BucketedGenerator, bucket_len, generate,
+                                init_params, synth_batch)
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    p = init_params(RNG, cfg)
+    batch = synth_batch(jax.random.PRNGKey(1), cfg, 8, 2, "prefill")
+    return cfg, p, batch
+
+
+# ------------------------------------------------------------ sample_logits
+
+def test_sample_logits_greedy_matches_log_softmax():
+    lg = jax.random.normal(jax.random.PRNGKey(2), (4, 64)) * 3
+    tok, lp = ops.sample_logits(lg, None)
+    ref_tok = jnp.argmax(lg, axis=-1)
+    ref_lp = jnp.take_along_axis(jax.nn.log_softmax(lg, -1),
+                                 ref_tok[:, None], -1)[:, 0]
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref_tok))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ref_lp), atol=1e-5)
+
+
+def test_sample_logits_gumbel_matches_categorical():
+    lg = jax.random.normal(jax.random.PRNGKey(3), (4, 64)) * 3
+    key = jax.random.PRNGKey(4)
+    tok, lp = ops.sample_logits(lg, key, sampler="gumbel")
+    ref = jax.random.categorical(key, lg, axis=-1)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(ref))
+    ref_lp = np.asarray(jax.nn.log_softmax(lg, -1))[np.arange(4),
+                                                    np.asarray(tok)]
+    np.testing.assert_allclose(np.asarray(lp), ref_lp, atol=1e-5)
+
+
+@pytest.mark.parametrize("v", [64, 4096, 17, 1000])
+def test_sample_logits_cdf_logprob_and_range(v):
+    """CDF sampler (chunked for divisible V, flat otherwise): tokens in
+    range, logprob is the exact log-softmax of the sampled token."""
+    b = 8
+    lg = jax.random.normal(jax.random.PRNGKey(5), (b, v)) * 2
+    tok, lp = ops.sample_logits(lg, jax.random.PRNGKey(6), sampler="cdf")
+    tok_np = np.asarray(tok)
+    assert tok_np.min() >= 0 and tok_np.max() < v
+    ref_lp = np.asarray(jax.nn.log_softmax(lg, -1))[np.arange(b), tok_np]
+    np.testing.assert_allclose(np.asarray(lp), ref_lp, atol=1e-4)
+
+
+def test_sample_logits_cdf_distribution():
+    """Empirical frequencies of the CDF sampler track softmax(logits)."""
+    v = 8
+    lg = jax.random.normal(jax.random.PRNGKey(7), (1, v)) * 2
+    probs = np.asarray(jax.nn.softmax(lg, -1))[0]
+    keys = jax.random.split(jax.random.PRNGKey(8), 512)
+    toks = np.asarray(jax.vmap(
+        lambda k: ops.sample_logits(lg, k, sampler="cdf")[0][0])(keys))
+    freq = np.bincount(toks, minlength=v) / len(toks)
+    assert np.max(np.abs(freq - probs)) < 0.08, (freq, probs)
+
+
+def test_sample_logits_rejects_bad_sampler():
+    lg = jnp.zeros((1, 8))
+    with pytest.raises(ValueError):
+        ops.sample_logits(lg, jax.random.PRNGKey(0), sampler="nope")
+
+
+# ----------------------------------------------------------------- generate
+
+def test_fused_gumbel_matches_legacy_exactly(setup):
+    cfg, p, batch = setup
+    rng = jax.random.PRNGKey(9)
+    a = generate(p, cfg, batch, num_new_tokens=6, rng=rng, fused=False)
+    b = generate(p, cfg, batch, num_new_tokens=6, rng=rng, fused=True,
+                 sampler="gumbel")
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_allclose(np.asarray(a["logprobs"]),
+                               np.asarray(b["logprobs"]), atol=1e-5)
+
+
+def test_fused_greedy_matches_legacy(setup):
+    cfg, p, batch = setup
+    a = generate(p, cfg, batch, num_new_tokens=6, fused=False)
+    b = generate(p, cfg, batch, num_new_tokens=6, fused=True)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_allclose(np.asarray(a["logprobs"]),
+                               np.asarray(b["logprobs"]), atol=1e-5)
+
+
+def test_fused_cdf_outputs_sane(setup):
+    cfg, p, batch = setup
+    out = generate(p, cfg, batch, num_new_tokens=6,
+                   rng=jax.random.PRNGKey(10), fused=True, sampler="cdf")
+    assert out["tokens"].shape == (2, 6)
+    toks = np.asarray(out["tokens"])
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    assert bool(jnp.all(out["logprobs"] <= 1e-6))
+
+
+def test_eos_never_hit_matches_scan_path(setup):
+    """With an unreachable eos_id the while_loop variant must reproduce the
+    scan path exactly (same keys, same sampler) and report an all-ones
+    mask."""
+    cfg, p, batch = setup
+    rng = jax.random.PRNGKey(11)
+    a = generate(p, cfg, batch, num_new_tokens=5, rng=rng, fused=True)
+    b = generate(p, cfg, batch, num_new_tokens=5, rng=rng, fused=True,
+                 eos_id=-1)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_allclose(np.asarray(a["logprobs"]),
+                               np.asarray(b["logprobs"]), atol=1e-5)
+    assert float(np.asarray(b["gen_mask"]).min()) == 1.0
+
+
+def test_eos_early_exit_pads_and_masks(setup):
+    """Forcing eos on the first sampled token: every later position is
+    forced to eos with logprob 0 and masked out."""
+    cfg, p, batch = setup
+    rng = jax.random.PRNGKey(12)
+    first = generate(p, cfg, batch, num_new_tokens=4, rng=rng, fused=True)
+    eos = int(np.asarray(first["tokens"])[0, 0])
+    out = generate(p, cfg, batch, num_new_tokens=4, rng=rng, fused=True,
+                   eos_id=eos)
+    toks = np.asarray(out["tokens"])
+    lps = np.asarray(out["logprobs"])
+    mask = np.asarray(out["gen_mask"])
+    assert toks[0, 0] == eos
+    assert (toks[0, 1:] == eos).all()
+    assert (lps[0, 1:] == 0.0).all()
+    assert mask[0, 0] == 1.0 and (mask[0, 1:] == 0.0).all()
+
+
+def test_rollout_runs_on_pallas_interpret_tier(setup):
+    """The impl dispatch reaches the Pallas decode kernel end-to-end
+    (interpret mode on CPU): same shapes, sane logprobs."""
+    cfg, p, batch = setup
+    out = generate(p, cfg, batch, num_new_tokens=3,
+                   rng=jax.random.PRNGKey(14), impl="pallas_interpret",
+                   fused=True)
+    assert out["tokens"].shape == (2, 3)
+    assert bool(jnp.all(jnp.isfinite(out["logprobs"])))
+    assert bool(jnp.all(out["logprobs"] <= 1e-6))
+
+
+def test_experiment_validates_and_plumbs_rollout_impl():
+    from repro.core.plan import Cluster
+    from repro.rlhf.experiment import ExperimentConfig, RLHFExperiment
+
+    actor = ARCHS["qwen2-0.5b"].reduced()
+    with pytest.raises(ValueError):
+        RLHFExperiment(actor, actor, Cluster(n_nodes=1, devs_per_node=1),
+                       ExperimentConfig(batch=2, prompt_len=8, gen_len=4,
+                                        search_iters=0, rollout_impl="nope"),
+                       search=False)
+
+
+# ----------------------------------------------------------------- buckets
+
+def test_bucket_len():
+    assert bucket_len(1) == 16
+    assert bucket_len(16) == 16
+    assert bucket_len(17) == 32
+    # beyond the largest bucket: exact size, never truncated/negative-padded
+    assert bucket_len(3000) == 3000
+
+
+def test_eos_requires_fused(setup):
+    cfg, p, batch = setup
+    with pytest.raises(ValueError):
+        generate(p, cfg, batch, num_new_tokens=4, fused=False, eos_id=3)
+
+
+def test_bucketed_rejects_prefix_configs():
+    vlm = ARCHS["internvl2-76b"].reduced()
+    assert vlm.prefix_len > 0
+    with pytest.raises(ValueError):
+        BucketedGenerator(vlm)
+
+
+def test_bucketed_beyond_largest_bucket(setup):
+    """Prompts/gen lengths past the last bucket get an exact-size program
+    instead of crashing on negative padding or silently truncating."""
+    cfg, p, _ = setup
+    gen = BucketedGenerator(cfg, buckets=(4, 8))
+    b = synth_batch(jax.random.PRNGKey(50), cfg, 11, 2, "prefill")
+    out = gen(p, b, num_new_tokens=10, rng=jax.random.PRNGKey(51))
+    assert out["tokens"].shape == (2, 10)
+
+
+def test_bucketed_generator_reuses_programs(setup):
+    cfg, p, _ = setup
+    gen = BucketedGenerator(cfg)
+    rng = jax.random.PRNGKey(13)
+    for i, plen in enumerate((5, 9, 13, 16)):
+        b = synth_batch(jax.random.PRNGKey(20 + i), cfg, plen, 2, "prefill")
+        out = gen(p, b, num_new_tokens=6, rng=rng)
+        assert out["tokens"].shape == (2, 6)
+        assert out["logprobs"].shape == (2, 6)
+    st = gen.stats()
+    assert st["compiles"] == 1 and st["hits"] == 3, st
+    # a second gen-length bucket compiles once more
+    b = synth_batch(jax.random.PRNGKey(30), cfg, 8, 2, "prefill")
+    gen(p, b, num_new_tokens=20, rng=rng)
+    assert gen.stats()["compiles"] == 2
+
+
+def test_bucketed_full_bucket_matches_direct(setup):
+    """A prompt already at bucket length needs no padding: the bucketed
+    call must equal calling generate directly."""
+    cfg, p, _ = setup
+    b = synth_batch(jax.random.PRNGKey(40), cfg, 16, 2, "prefill")
+    rng = jax.random.PRNGKey(41)
+    gen = BucketedGenerator(cfg)
+    a = gen(p, b, num_new_tokens=16, rng=rng)
+    d = generate(p, cfg, b, num_new_tokens=16, rng=rng, fused=True)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(d["tokens"]))
