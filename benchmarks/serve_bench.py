@@ -1,0 +1,141 @@
+"""Serve-path benchmark: paged-KV continuous batching vs the bucketed
+run-to-completion baseline (real wall time, CPU-safe).
+
+The workload is a long-tail (geometric) generation-length mix over ragged
+prompts — the regime the bucketed ``BatchServer`` handles worst: it must
+decode every request to the batch's longest generation and hold a full
+``max_len`` KV buffer per request for the whole run, while the
+``ContinuousBatchServer`` retires each request at its own length, admits
+queued work into the freed slot, and only ever holds ``ceil(len /
+block_size)`` KV blocks per live sequence.
+
+Reports useful-tokens/s (requested tokens only; the baseline's overshoot
+is waste, not throughput) and peak KV bytes for both engines.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json out.json
+
+Wired into ``benchmarks/run.py`` as ``--only serve``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _workload(cfg, n_req: int, max_prompt: int, mean_new: float,
+              max_new: int, seed: int = 0, long_frac: float = 0.15):
+    """Long-tail generation-length mix: a geometric body (most requests
+    finish after a handful of tokens) plus a ``long_frac`` slice of
+    stragglers drawn near ``max_new`` — the regime where run-to-completion
+    batching pays the straggler's length for every request."""
+    import numpy as np
+    r = np.random.default_rng(seed)
+    prompts = [np.asarray(r.integers(1, cfg.vocab_size,
+                                     r.integers(4, max_prompt + 1)), np.int32)
+               for _ in range(n_req)]
+    new = np.minimum(r.geometric(1.0 / mean_new, n_req), max_new)
+    n_long = max(1, int(n_req * long_frac))
+    new[r.choice(n_req, n_long, replace=False)] = r.integers(
+        max_new // 2, max_new + 1, n_long)
+    return prompts, [int(x) for x in new]
+
+
+def _bucketed_peak_bytes(cfg, prompts, max_new: int) -> int:
+    """The baseline's KV footprint: each bucket batch holds full
+    (bucket + max_new)-length buffers for every request in it."""
+    from repro.launch.serve import bucket_of
+    from repro.models import full_buffer_bytes
+    groups: dict[int, int] = {}
+    for p in prompts:
+        b = bucket_of(len(p))
+        groups[b] = groups.get(b, 0) + 1
+    return max(full_buffer_bytes(cfg, n, b + max_new, cfg.dtype)
+               for b, n in groups.items())
+
+
+def bench_serve(n_req=24, n_slots=8, block_size=16, max_prompt=28,
+                mean_new=8.0, max_new=64, seed=0, sync_every=8):
+    import jax
+    from repro.configs import ARCHS
+    from repro.launch.serve import BatchServer, ContinuousBatchServer
+    from repro.models import init_params
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts, new = _workload(cfg, n_req, max_prompt, mean_new, max_new, seed)
+    useful = sum(new)
+    key = jax.random.PRNGKey(1)
+
+    # ---- bucketed baseline: run-to-completion at the longest generation
+    bucketed = BatchServer(cfg, params, max_new=max(new))
+    bucketed.serve(prompts, key)  # warmup/compile
+    t0 = time.perf_counter()
+    bucketed.serve(prompts, key)
+    dt_b = time.perf_counter() - t0
+    kv_b = _bucketed_peak_bytes(cfg, prompts, max(new))
+
+    # ---- paged continuous batching
+    cont = ContinuousBatchServer(
+        cfg, params, n_slots=n_slots, kv_block_size=block_size,
+        max_prompt=max_prompt, max_new=max_new, sync_every=sync_every)
+    cont.serve(prompts, rng=key, max_new=new)  # warmup/compile
+    cont.alloc.reset_peak()
+    steps0 = cont.steps
+    t0 = time.perf_counter()
+    cont.serve(prompts, rng=key, max_new=new)
+    dt_c = time.perf_counter() - t0
+    kv_c = cont.kv_peak_bytes()
+    st = cont.stats()
+
+    tok_s_b, tok_s_c = useful / dt_b, useful / dt_c
+    summary = {
+        "workload": {"requests": n_req, "useful_tokens": useful,
+                     "max_new": max(new), "mean_new": sum(new) / n_req},
+        "bucketed": {"tok_s": tok_s_b, "kv_peak_bytes": kv_b,
+                     "wall_s": dt_b},
+        "continuous": {"tok_s": tok_s_c, "kv_peak_bytes": kv_c,
+                       "wall_s": dt_c, "steps": st["steps"] - steps0,
+                       "peak_blocks": st["peak_blocks"],
+                       "preemptions": st["preemptions"]},
+        "speedup": tok_s_c / tok_s_b,
+        "kv_ratio": kv_c / kv_b,
+    }
+    rows = [
+        ("serve/bucketed", dt_b / useful * 1e6,
+         f"tok_s={tok_s_b:.0f};kv_peak={kv_b}"),
+        ("serve/continuous", dt_c / useful * 1e6,
+         f"tok_s={tok_s_c:.0f};kv_peak={kv_c};"
+         f"steps={st['steps'] - steps0};preempt={st['preemptions']}"),
+        ("serve/speedup", 0.0,
+         f"continuous_over_bucketed={summary['speedup']:.2f}x;"
+         f"kv_ratio={summary['kv_ratio']:.2f}"),
+    ]
+    return rows, summary
+
+
+def run():
+    return bench_serve()[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-friendly workload")
+    ap.add_argument("--json", default=None,
+                    help="write the summary dict to this path")
+    args = ap.parse_args()
+
+    from benchmarks.common import emit
+    kw = (dict(n_req=20, n_slots=6, block_size=8, max_prompt=20,
+               mean_new=4.0, max_new=48) if args.smoke else {})
+    rows, summary = bench_serve(**kw)
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,18 +25,23 @@ LANES = 128
 NEG_INF = -2.0**30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale, block_k, n_k, cap):
-    ik = pl.program_id(2)
+def online_softmax_step(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                        scale, limit, k_start, step, n_steps):
+    """One KV-tile step of the shared online-softmax decode body.
 
-    @pl.when(ik == 0)
+    ``step``/``n_steps``: position in the innermost ("arbitrary") grid
+    axis; ``k_start``: logical position of this tile's first key;
+    ``limit``: number of valid keys for this row.  Initializes the scratch
+    carry on the first step, rescales the (max, sum, acc) carry on every
+    in-bounds tile, and writes the normalized output on the last step.
+    Shared by the contiguous (``flash_decode``) and block-table-paged
+    (``paged_flash_decode``) kernels — only how (limit, tile) are derived
+    differs between them."""
+    @pl.when(step == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    limit = jnp.minimum(len_ref[0, 0], cap)
-    k_start = ik * block_k
 
     @pl.when(k_start < limit)
     def _compute():
@@ -58,11 +63,19 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             preferred_element_type=jnp.float32)
         m_scr[:, 0] = m_cur
 
-    @pl.when(ik == n_k - 1)
+    @pl.when(step == n_steps - 1)
     def _finalize():
         l = l_scr[:, 0]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k, n_k, cap):
+    ik = pl.program_id(2)
+    online_softmax_step(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                        scale=scale, limit=jnp.minimum(len_ref[0, 0], cap),
+                        k_start=ik * block_k, step=ik, n_steps=n_k)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))

@@ -53,6 +53,28 @@ def decode_mha(q, k_cache, v_cache, *, cache_len, window=None, impl="reference")
         interpret=(impl == "pallas_interpret"))
 
 
+def paged_decode_mha(q, k_pool, v_pool, block_table, *, cache_len,
+                     impl="reference"):
+    """Single-token decode attention over a paged (block-pool) KV cache.
+
+    q: (B, Hq, D); pools: (N, bs, Hkv, D); block_table: (B, M) int32 of
+    physical block ids; cache_len: (B,).  See ``ref.paged_decode_mha_ref``
+    for the layout contract.  Returns (B, Hq, D)."""
+    _check(impl)
+    if impl == "stub":
+        return q + 0.0 * (k_pool.sum() + v_pool.sum())
+    if impl == "reference":
+        return ref.paged_decode_mha_ref(q, k_pool, v_pool, block_table,
+                                        cache_len=cache_len)
+    from repro.kernels import paged_decode_attention
+    return paged_decode_attention.paged_flash_decode(
+        q, k_pool, v_pool, block_table, cache_len=cache_len,
+        interpret=(impl == "pallas_interpret"))
+
+
+NEG_INF = -2.0**30
+
+
 def _cdf_chunk(v: int) -> int:
     """Largest power-of-two chunk <= 1024 that divides V (0 = no chunking)."""
     k = 1024
@@ -63,16 +85,16 @@ def _cdf_chunk(v: int) -> int:
     return 0
 
 
-def _sample_cdf(lg, key, temperature: float):
-    """Two-level inverse-CDF sample from logits (one uniform per row).
+def _sample_cdf(scaled, key):
+    """Two-level inverse-CDF sample from (already tempered/truncated)
+    logits — one uniform per row.
 
     Avoids the full-vocab Gumbel field of ``jax.random.categorical`` (V
     random bits per row) and the O(V) cumsum of a flat CDF: pass 1 reduces
     exp-sums per chunk, the chunk CDF is tiny, and only the selected chunk
     gets an exact intra-chunk cumsum.  Total (B, V) traffic ~2 read passes,
     nothing vocab-sized written.  Returns (token, logsumexp(scaled))."""
-    b, v = lg.shape
-    scaled = lg if temperature == 1.0 else lg / max(temperature, 1e-6)
+    b, v = scaled.shape
     m = jnp.max(scaled, axis=-1, keepdims=True)
     k = _cdf_chunk(v)
     u01 = jax.random.uniform(key, (b, 1))
@@ -99,14 +121,45 @@ def _sample_cdf(lg, key, temperature: float):
     return tok, m[:, 0] + jnp.log(z[:, 0])
 
 
+def _truncate_logits(scaled, top_k: int, top_p: float):
+    """Mask (tempered) logits outside the top-k / nucleus-top-p set.
+
+    Masked entries go to NEG_INF, so the downstream CDF/Gumbel draw is the
+    renormalized distribution over the kept set — no (B, V) probability
+    array is written, only a masked copy of the logits the sampler was
+    going to read anyway.  Top-p always keeps the most likely token; ties
+    at the cutoff are kept (superset)."""
+    v = scaled.shape[-1]
+    if top_k and top_k < v:
+        kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
+        scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+    if top_p < 1.0:
+        srt = jnp.sort(scaled, axis=-1)[:, ::-1]  # descending
+        e = jnp.exp(srt - srt[:, :1])
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        cdf_excl = (jnp.cumsum(e, axis=-1) - e) / z  # mass strictly above
+        cnt = jnp.sum(cdf_excl < top_p, axis=-1, keepdims=True)  # >= 1
+        thr = jnp.take_along_axis(srt, cnt - 1, axis=-1)
+        scaled = jnp.where(scaled < thr, NEG_INF, scaled)
+    return scaled
+
+
 def sample_logits(logits, key=None, *, temperature: float = 1.0,
-                  sampler: str = "cdf", impl="reference"):
+                  sampler: str = "cdf", top_k: int = 0, top_p: float = 1.0,
+                  impl="reference"):
     """Fused sampling + logprob extraction from decode logits.
 
     logits: (B, V).  Returns (token (B,) int32, logprob (B,) f32) where the
-    logprob is under the *untempered* distribution (PPO convention).  The
-    fusion never materializes a (B, V) ``log_softmax``; greedy when ``key``
-    is None.
+    logprob is under the *untempered, untruncated* distribution (PPO
+    convention — the scorer sees the full softmax).  The fusion never
+    materializes a (B, V) ``log_softmax``; greedy when ``key`` is None.
+
+    ``top_k`` (0 = off) and ``top_p`` (1.0 = off) truncate the *sampling*
+    distribution: logits outside the kept set are masked to NEG_INF before
+    the draw (mask-then-renormalize — the CDF/Gumbel pass renormalizes
+    implicitly), so truncated sampling stays on the no-(B, V)-
+    materialization fast path.  Greedy decoding ignores truncation (the
+    argmax is always kept).
 
     ``sampler`` picks the stochastic path:
       - "cdf" (default): two-level inverse-CDF — one uniform per row, ~2
@@ -121,17 +174,23 @@ def sample_logits(logits, key=None, *, temperature: float = 1.0,
     _check(impl)
     if sampler not in ("cdf", "gumbel"):
         raise ValueError(f"sampler={sampler!r} not in ('cdf', 'gumbel')")
+    if top_k < 0 or not 0.0 < top_p <= 1.0:
+        raise ValueError(f"bad truncation top_k={top_k} top_p={top_p}")
     lg = logits.astype(jnp.float32)
+    truncated = bool(top_k and top_k < lg.shape[-1]) or top_p < 1.0
     lse = None
     if key is None:
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    elif sampler == "cdf":
-        tok, lse_scaled = _sample_cdf(lg, key, temperature)
-        if temperature == 1.0:  # reuse the sampler's partition function
-            lse = lse_scaled
     else:
         scaled = lg if temperature == 1.0 else lg / max(temperature, 1e-6)
-        tok = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        if truncated:
+            scaled = _truncate_logits(scaled, top_k, top_p)
+        if sampler == "cdf":
+            tok, lse_scaled = _sample_cdf(scaled, key)
+            if temperature == 1.0 and not truncated:
+                lse = lse_scaled  # reuse the sampler's partition function
+        else:
+            tok = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     if lse is None:
         lse = jax.nn.logsumexp(lg, axis=-1)
     lp = jnp.take_along_axis(lg, tok[:, None], axis=-1)[:, 0] - lse

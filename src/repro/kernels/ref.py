@@ -106,6 +106,24 @@ def decode_mha_ref(q, k_cache, v_cache, *, cache_len, window: int | None = None)
     return out.reshape(b, hq, d)
 
 
+def paged_decode_mha_ref(q, k_pool, v_pool, block_table, *, cache_len):
+    """Single-token decode attention over a paged (block-pool) KV cache.
+
+    q: (B, Hq, D).  k_pool/v_pool: (N, bs, Hkv, D) — a shared pool of N
+    fixed-size blocks of bs tokens each.  ``block_table``: (B, M) int32
+    physical block ids; logical position p of sequence b lives at
+    ``pool[block_table[b, p // bs], p % bs]``.  ``cache_len``: (B,) tokens
+    written so far (the new token's position + 1).  Unallocated table
+    entries may point anywhere (conventionally block 0); they are masked
+    because every position >= cache_len is masked.  Returns (B, Hq, D).
+    """
+    b, m = block_table.shape
+    _, bs, hkv, d = k_pool.shape
+    k_cache = k_pool[block_table].reshape(b, m * bs, hkv, d)
+    v_cache = v_pool[block_table].reshape(b, m * bs, hkv, d)
+    return decode_mha_ref(q, k_cache, v_cache, cache_len=cache_len)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality), chunked
 # ---------------------------------------------------------------------------

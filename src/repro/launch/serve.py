@@ -1,18 +1,30 @@
-"""Batched serving launcher: the generation-side runtime that backs the
+"""Serving launchers: the generation-side runtime that backs the
 actor-generation function call, exposed standalone.
 
-Requests are grouped into shape buckets (prompt length rounded up to a
-power of two) so each bucket reuses one compiled prefill+decode program —
-the TPU analogue of the paper's CUDAGraph decode: no per-token dispatch,
-one executable per bucket.
+Two engines share the functional model API:
+
+``BatchServer`` (legacy baseline) groups requests into prompt-length
+buckets (rounded up to a power of two) so each bucket reuses one compiled
+prefill+decode program.  Every request holds a full ``max_len`` KV buffer
+for its whole life and a batch runs at the pace of its longest generation.
+
+``ContinuousBatchServer`` is the production-shaped engine: one jitted
+decode step over a fixed number of slots, a paged/block KV cache
+(``models/paged_cache``) so a sequence only ever holds ``ceil(len /
+block_size)`` blocks, and request admission *between* steps — a finished
+sequence's slot and blocks are immediately reused by queued requests, so
+short requests return as they complete instead of riding out the batch's
+longest generation.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-        --requests 12 --new 16
+        --requests 12 --new 16 --mode continuous
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import time
 
 
@@ -24,14 +36,18 @@ def bucket_of(length: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
 class BatchServer:
     """Minimal bucketed batch server over the functional model API."""
 
-    def __init__(self, cfg, params, max_new: int, pad_id: int = 0):
+    def __init__(self, cfg, params, max_new: int, pad_id: int = 0,
+                 eos_id=None, temperature: float = 1.0, sampler: str = "cdf",
+                 top_k: int = 0, top_p: float = 1.0, impl: str = "reference"):
         import jax
         from repro.models import generate
         self.cfg, self.params, self.max_new = cfg, params, max_new
         self.pad_id = pad_id
         self._gen = jax.jit(
             lambda p, b, k: generate(p, cfg, b, num_new_tokens=max_new,
-                                     rng=k),
+                                     rng=k, temperature=temperature,
+                                     eos_id=eos_id, sampler=sampler,
+                                     top_k=top_k, top_p=top_p, impl=impl),
             static_argnames=())
         self._compiled_buckets = set()
 
@@ -55,12 +71,401 @@ class BatchServer:
         return results
 
 
+# --------------------------------------------------------------- continuous
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: object  # np.ndarray int32
+    max_new: int
+    tokens: list = dataclasses.field(default_factory=list)
+    logps: list = dataclasses.field(default_factory=list)
+    blocks: list = dataclasses.field(default_factory=list)
+
+    def reset(self):  # recompute-style preemption: restart from the prompt
+        self.tokens, self.logps, self.blocks = [], [], []
+
+
+class ContinuousBatchServer:
+    """Continuous-batching decode engine over a paged KV cache.
+
+    One jitted decode step runs every slot each iteration (fixed shapes —
+    the same no-per-token-dispatch property as the scanned ``generate``
+    loop, but across *requests*): per-row positions, a block table into the
+    shared KV pool, fused sampling.  Between steps the host admits queued
+    requests into freed slots (a batch=1 bucketed prefill fills freshly
+    allocated blocks) and retires finished rows, freeing their blocks for
+    reuse.  If the pool runs dry mid-flight the youngest active request is
+    preempted (blocks freed, request requeued and recomputed later) so the
+    oldest requests always make progress.
+
+    Inactive slots point at the reserved scratch block 0 and are masked on
+    the host — they ride along in the fixed-shape step at zero allocation
+    cost.
+
+    ``sync_every`` amortizes host<->device round trips: each dispatch runs
+    that many decode steps as one compiled ``lax.scan`` chunk and the host
+    only inspects tokens (EOS / length / admission) at chunk boundaries.
+    Rows that finish mid-chunk decode a few throwaway tokens into their own
+    (about-to-be-freed) blocks — bounded waste, large dispatch saving.
+    """
+
+    def __init__(self, cfg, params, *, n_slots: int = 8,
+                 kv_block_size: int = 16, max_kv_blocks: int = 0,
+                 max_prompt: int = 128, max_new: int = 128,
+                 eos_id=None, temperature: float = 1.0, sampler: str = "cdf",
+                 top_k: int = 0, top_p: float = 1.0, impl: str = "reference",
+                 pad_id: int = 0, sync_every: int = 4,
+                 prompt_buckets=(16, 32, 64, 128, 256, 512, 1024)):
+        import jax
+        import numpy as np
+        from repro.models import paged_cache as PC
+
+        if cfg.prefix_len and cfg.family != "encdec":
+            raise ValueError("ContinuousBatchServer does not support prefix "
+                             "(vlm) configs")
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.bs = n_slots, kv_block_size
+        self.max_new, self.pad_id = max_new, pad_id
+        self.eos_id, self.temperature = eos_id, temperature
+        self.sampler, self.top_k, self.top_p = sampler, top_k, top_p
+        self.impl = impl
+        self.sync_every = max(1, sync_every)
+        self.prompt_buckets = prompt_buckets
+        self.max_len = bucket_of(max_prompt, prompt_buckets) + max_new
+        # chunked decode can overshoot a row's logical end by sync_every-1
+        # positions before the host trims it — budget table + pool for it
+        self.max_blocks = PC.needed_blocks(
+            self.max_len + self.sync_every - 1, self.bs)
+        if max_kv_blocks <= 0:  # worst case: every slot at full length
+            max_kv_blocks = PC.RESERVED_BLOCKS + n_slots * self.max_blocks
+        self.alloc = PC.BlockAllocator(max_kv_blocks, self.bs)
+        self.caches = PC.paged_cache_init(
+            cfg, n_slots, max_kv_blocks, self.bs, self.max_len, cfg.dtype)
+        self.table = np.zeros((n_slots, self.max_blocks), np.int32)
+        self.seq_lens = np.zeros(n_slots, np.int32)
+        self.cur_tok = np.zeros(n_slots, np.int32)
+        self.slots: list = [None] * n_slots
+        self.queue: collections.deque = collections.deque()
+        self._rng = jax.random.PRNGKey(0)
+        self._step_fns: dict = {}
+        self._admit_fns: dict = {}
+        self.steps = 0
+        self.preemptions = 0
+        self.compiles = 0
+        self.completion_order: list[int] = []
+        self._results: dict = {}
+
+    # -------------------------------------------------------- compiled fns
+    def _donate(self):
+        import jax
+        # buffer donation is a no-op warning on CPU; keep logs clean there
+        return jax.default_backend() != "cpu"
+
+    def _step_fn(self, sampled: bool):
+        """One dispatch = ``sync_every`` decode steps as a compiled scan."""
+        import jax
+        from repro.models import model as MDL
+        fn = self._step_fns.get(sampled)
+        if fn is None:
+            self.compiles += 1
+            k_steps = self.sync_every
+
+            def run(p, caches, tbl, pos, tok, key):
+                keys = jax.random.split(key, k_steps)
+
+                def body(carry, kk):
+                    tok, pos, caches = carry
+                    ntok, lp, caches = MDL.paged_decode_and_sample_step(
+                        p, self.cfg, tok, caches, tbl, pos,
+                        kk if sampled else None,
+                        temperature=self.temperature, sampler=self.sampler,
+                        top_k=self.top_k, top_p=self.top_p, impl=self.impl)
+                    return (ntok, pos + 1, caches), (ntok, lp)
+
+                (_, _, caches), (toks, lps) = jax.lax.scan(
+                    body, (tok, pos, caches), keys)
+                return toks, lps, caches  # (k_steps, n_slots) each
+
+            fn = self._step_fns[sampled] = jax.jit(
+                run, donate_argnums=(1,) if self._donate() else ())
+        return fn
+
+    def _admit_fn(self, plen: int, width: int, sampled: bool):
+        """Fused batched prefill + first-token sample + paged-cache insert:
+        one dispatch admits up to ``width`` same-bucket requests (padding
+        rows carry slot index ``n_slots`` — dropped by the scatter — and
+        scratch-block table rows).  One program per (prompt bucket, width,
+        sampled?)."""
+        import jax
+        from repro.kernels import ops
+        from repro.models import model as MDL
+        from repro.models import paged_cache as PC
+        key_ = (plen, width, sampled)
+        fn = self._admit_fns.get(key_)
+        if fn is None:
+            self.compiles += 1
+
+            def run(p, caches, batch, slots, table_rows, key):
+                last_h, dense = MDL.prefill(p, self.cfg, batch, max_len=plen,
+                                            impl=self.impl)
+                logits0 = MDL.logits_of(p, self.cfg, last_h[:, None])[:, 0]
+                tok0, lp0 = ops.sample_logits(
+                    logits0, key if sampled else None,
+                    temperature=self.temperature, sampler=self.sampler,
+                    top_k=self.top_k, top_p=self.top_p, impl=self.impl)
+                caches = PC.paged_insert(self.cfg, caches, dense, slots,
+                                         table_rows, plen)
+                return tok0, lp0, caches
+
+            fn = self._admit_fns[key_] = jax.jit(
+                run, donate_argnums=(1,) if self._donate() else ())
+        return fn
+
+    def _next_key(self):
+        import jax
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    # ----------------------------------------------------------- scheduling
+    def _active(self):
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def _complete(self, slot: int):
+        import numpy as np
+        req = self.slots[slot]
+        self._results[req.rid] = (np.asarray(req.tokens, np.int32),
+                                  np.asarray(req.logps, np.float32))
+        self.completion_order.append(req.rid)
+        self.alloc.free(req.blocks)
+        req.blocks = []
+        self.table[slot, :] = 0
+        self.seq_lens[slot] = 0
+        self.cur_tok[slot] = 0
+        self.slots[slot] = None
+
+    def _preempt(self, slot: int):
+        """Recompute-style preemption: free the victim's blocks and requeue
+        it (it restarts from its prompt on re-admission), re-inserted in
+        arrival order so FCFS admission is preserved."""
+        req = self.slots[slot]
+        self.alloc.free(req.blocks)
+        req.reset()
+        idx = 0
+        while idx < len(self.queue) and self.queue[idx].rid < req.rid:
+            idx += 1
+        self.queue.insert(idx, req)
+        self.table[slot, :] = 0
+        self.seq_lens[slot] = 0
+        self.cur_tok[slot] = 0
+        self.slots[slot] = None
+        self.preemptions += 1
+
+    def _try_admit(self, sampled: bool):
+        """Admit queued requests into free slots, batching every queued
+        request that shares the head's prompt bucket into ONE fused
+        prefill+insert dispatch (FCFS within a bucket; the head's bucket is
+        always served first, so no starvation)."""
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models import paged_cache as PC
+        while self.queue:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            if not free:
+                return
+            head = self.queue[0]
+            pb = bucket_of(len(head.prompt), self.prompt_buckets)
+            nb = PC.needed_blocks(pb, self.bs)
+            # same-bucket requests, as many as slots and blocks allow
+            batch_reqs, budget = [], self.alloc.free_count
+            for req in self.queue:
+                if len(batch_reqs) >= len(free) or budget < nb:
+                    break
+                if bucket_of(len(req.prompt), self.prompt_buckets) != pb:
+                    continue
+                batch_reqs.append(req)
+                budget -= nb
+            if not batch_reqs:
+                return  # head can't fit yet: wait for completions
+            for req in batch_reqs:
+                self.queue.remove(req)
+            k = len(batch_reqs)
+            width = 1
+            while width < k:
+                width *= 2
+            toks = np.full((width, pb), self.pad_id, np.int32)
+            slots_arr = np.full((width,), self.n_slots, np.int32)  # dropped
+            table_arr = np.zeros((width, nb), np.int32)  # scratch block 0
+            for row, req in enumerate(batch_reqs):
+                req.blocks = self.alloc.alloc(nb)
+                toks[row, pb - len(req.prompt):] = req.prompt  # left-pad
+                slots_arr[row] = free[row]
+                table_arr[row] = req.blocks
+            tok0, lp0, self.caches = self._admit_fn(pb, width, sampled)(
+                self.params, self.caches, {"tokens": jnp.asarray(toks)},
+                jnp.asarray(slots_arr), jnp.asarray(table_arr),
+                self._next_key())
+            tok0, lp0 = np.asarray(tok0), np.asarray(lp0)
+            for row, req in enumerate(batch_reqs):
+                slot = free[row]
+                req.tokens.append(int(tok0[row]))
+                req.logps.append(float(lp0[row]))
+                self.table[slot, :] = 0
+                self.table[slot, :nb] = req.blocks
+                self.seq_lens[slot] = pb
+                self.cur_tok[slot] = req.tokens[-1]
+                self.slots[slot] = req
+                if (len(req.tokens) >= req.max_new
+                        or (self.eos_id is not None
+                            and req.tokens[-1] == self.eos_id)):
+                    self._complete(slot)
+
+    def _ensure_blocks(self):
+        """Grow each active row's block list to cover the whole upcoming
+        decode chunk (``sync_every`` writes), preempting the youngest
+        request when the pool runs dry.
+
+        Rows grow oldest-first, and a row never evicts an older one — if
+        only older rows remain as victims, the growing row preempts
+        *itself* — so the oldest request always makes forward progress."""
+        for slot in sorted(self._active(),
+                           key=lambda s: self.slots[s].rid):
+            req = self.slots[slot]
+            if req is None:  # preempted by an earlier iteration
+                continue
+            need = (int(self.seq_lens[slot]) + self.sync_every - 1) // self.bs
+            while need >= len(req.blocks):
+                if self.alloc.free_count > 0:
+                    blk = self.alloc.alloc(1)[0]
+                    self.table[slot, len(req.blocks)] = blk
+                    req.blocks.append(blk)
+                    continue
+                victims = [s for s in self._active() if s != slot]
+                if not victims:
+                    raise MemoryError(
+                        "KV pool too small for a single request; raise "
+                        "max_kv_blocks")
+                victim = max(victims, key=lambda s: self.slots[s].rid)
+                if self.slots[victim].rid < req.rid:
+                    self._preempt(slot)  # everyone else is older: yield
+                    break
+                self._preempt(victim)
+
+    def _decode_step(self, sampled: bool):
+        """One dispatch: ``sync_every`` decode steps for every slot, then
+        host-side retirement.  A row finishing mid-chunk has its throwaway
+        tail tokens dropped here (their KV went into blocks that are freed
+        immediately below)."""
+        import jax.numpy as jnp
+        import numpy as np
+        self._ensure_blocks()
+        toks, lps, self.caches = self._step_fn(sampled)(
+            self.params, self.caches, jnp.asarray(self.table),
+            jnp.asarray(self.seq_lens), jnp.asarray(self.cur_tok),
+            self._next_key())
+        toks, lps = np.asarray(toks), np.asarray(lps)  # (k, n_slots)
+        self.steps += 1
+        for slot in self._active():
+            req = self.slots[slot]
+            for j in range(self.sync_every):
+                self.seq_lens[slot] += 1
+                t = int(toks[j, slot])
+                req.tokens.append(t)
+                req.logps.append(float(lps[j, slot]))
+                self.cur_tok[slot] = t
+                if (len(req.tokens) >= req.max_new
+                        or (self.eos_id is not None and t == self.eos_id)):
+                    self._complete(slot)
+                    break
+
+    # -------------------------------------------------------------- serving
+    def serve(self, prompts, rng=None, max_new=None):
+        """prompts: list of 1-D int32 arrays (ragged).  ``max_new``: int or
+        per-request list (default: the server's ``max_new``).  ``rng=None``
+        decodes greedily.  Returns (tokens_list, logps_list) in request
+        order; requests *complete* out of order (see
+        ``completion_order``)."""
+        import numpy as np
+        if rng is not None:
+            self._rng = rng
+        sampled = rng is not None
+        n = len(prompts)
+        if max_new is None:
+            max_new = self.max_new
+        per_req = list(max_new) if hasattr(max_new, "__len__") \
+            else [max_new] * n
+        if len(per_req) != n:
+            raise ValueError(f"max_new has {len(per_req)} entries for "
+                             f"{n} prompts")
+        base = len(self._results)
+        reqs = [_Request(rid=base + i, prompt=np.asarray(p, np.int32),
+                         max_new=int(m)) for i, (p, m)
+                in enumerate(zip(prompts, per_req))]
+        # validate before any work: a bad request must be rejected here,
+        # not raise mid-flight out of _try_admit (which would lose every
+        # in-flight request and leave the queue poisoned)
+        for r in reqs:
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            pb = bucket_of(len(r.prompt), self.prompt_buckets)
+            if pb + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt bucket {pb} + max_new "
+                    f"{r.max_new} exceeds max_len {self.max_len}")
+        self.queue.extend(reqs)
+        while self.queue or self._active():
+            self._try_admit(sampled)
+            if self._active():
+                self._decode_step(sampled)
+            elif self.queue:
+                raise MemoryError(
+                    "queued request cannot be admitted into an empty "
+                    "server; raise max_kv_blocks")
+        toks = [self._results[r.rid][0] for r in reqs]
+        lps = [self._results[r.rid][1] for r in reqs]
+        return toks, lps
+
+    def stats(self) -> dict:
+        return {"steps": self.steps, "preemptions": self.preemptions,
+                "compiles": self.compiles, "peak_blocks": self.alloc.peak,
+                "completion_order": list(self.completion_order)}
+
+    def kv_peak_bytes(self) -> int:
+        from repro.models import paged_cache as PC
+        return PC.kv_pool_bytes(self.cfg, self.alloc.peak, self.bs,
+                                self.cfg.dtype)
+
+
+def build_server(cfg, params, exp, *, max_prompt: int = 128,
+                 max_new: int = 128):
+    """Construct the serve engine selected by ``ExperimentConfig.serve_mode``
+    ("bucketed" | "continuous"), plumbing the sampler/kv knobs through."""
+    if exp.serve_mode == "bucketed":
+        return BatchServer(cfg, params, max_new=max_new, eos_id=exp.eos_id,
+                           sampler=exp.sampler, top_k=exp.top_k,
+                           top_p=exp.top_p,
+                           impl=exp.rollout_impl or exp.impl)
+    if exp.serve_mode != "continuous":
+        raise ValueError(f"serve_mode={exp.serve_mode!r} not in "
+                         "('bucketed', 'continuous')")
+    return ContinuousBatchServer(
+        cfg, params, kv_block_size=exp.kv_block_size,
+        max_kv_blocks=exp.max_kv_blocks, max_prompt=max_prompt,
+        max_new=max_new, eos_id=exp.eos_id, sampler=exp.sampler,
+        top_k=exp.top_k, top_p=exp.top_p,
+        impl=exp.rollout_impl or exp.impl)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["bucketed", "continuous"])
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     import jax
@@ -72,18 +477,28 @@ def main():
     if args.smoke:
         cfg = cfg.reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    server = BatchServer(cfg, params, max_new=args.new)
 
     rng = np.random.default_rng(0)
     prompts = [np.asarray(rng.integers(1, cfg.vocab_size, rng.integers(4, 40)),
                           np.int32) for _ in range(args.requests)]
     t0 = time.time()
-    out = server.serve(prompts, jax.random.PRNGKey(1))
+    if args.mode == "bucketed":
+        server = BatchServer(cfg, params, max_new=args.new)
+        out = server.serve(prompts, jax.random.PRNGKey(1))
+        extra = f"buckets={sorted(server._compiled_buckets)}"
+    else:
+        server = ContinuousBatchServer(
+            cfg, params, n_slots=args.slots, kv_block_size=args.block_size,
+            max_prompt=64, max_new=args.new)
+        out, _ = server.serve(prompts, jax.random.PRNGKey(1))
+        st = server.stats()
+        extra = (f"steps={st['steps']} peak_blocks={st['peak_blocks']} "
+                 f"kv_peak={server.kv_peak_bytes()}B")
     dt = time.time() - t0
     toks = sum(len(o) for o in out)
     print(f"served {len(prompts)} ragged requests in {dt:.1f}s "
-          f"({toks} new tokens, buckets={sorted(server._compiled_buckets)})")
-    print("first output:", out[0][:8].tolist())
+          f"({toks} new tokens, mode={args.mode}, {extra})")
+    print("first output:", np.asarray(out[0][:8]).tolist())
 
 
 if __name__ == "__main__":

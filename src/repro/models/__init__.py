@@ -1,8 +1,15 @@
 from repro.models.model import (decode_step, forward, generate, init_params,
-                                input_specs, lm_loss, logits_of, prefill,
+                                input_specs, lm_loss, logits_of,
+                                paged_decode_and_sample_step, prefill,
                                 synth_batch, values_of)
+from repro.models.paged_cache import (BlockAllocator, full_buffer_bytes,
+                                      kv_pool_bytes, needed_blocks,
+                                      paged_cache_init, paged_insert)
 
 __all__ = [
-    "decode_step", "forward", "generate", "init_params", "input_specs",
-    "lm_loss", "logits_of", "prefill", "synth_batch", "values_of",
+    "BlockAllocator", "decode_step", "forward", "full_buffer_bytes",
+    "generate", "init_params", "input_specs", "kv_pool_bytes", "lm_loss",
+    "logits_of", "needed_blocks", "paged_cache_init",
+    "paged_decode_and_sample_step", "paged_insert", "prefill", "synth_batch",
+    "values_of",
 ]

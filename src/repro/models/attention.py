@@ -120,6 +120,58 @@ def prefill_into_cache(cache, spec: LayerSpec, k, v, seq_len: int):
     }
 
 
+def paged_attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
+                            block_table, positions, *, impl="reference"):
+    """One-token decode through a paged block-pool KV cache.
+
+    x: (B, 1, D); cache: {"k"/"v": (N, bs, Hkv, Dh)} shared pools;
+    block_table: (B, M) int32; positions: (B,) int32 per-row write position
+    (= tokens already cached for that row — rows advance independently
+    under continuous batching).  Returns (y, new_cache)."""
+    b = x.shape[0]
+    pos = positions[:, None]
+    q, k, v = _project_qkv(p, cfg, x, x, pos, pos, use_rope=True)
+    bs = cache["k"].shape[1]
+    blk = block_table[jnp.arange(b), positions // bs]  # (B,) physical ids
+    off = positions % bs
+    new_cache = {
+        "k": cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype)),
+    }
+    out = ops.paged_decode_mha(q[:, 0], new_cache["k"], new_cache["v"],
+                               block_table, cache_len=positions + 1,
+                               impl=impl)
+    y = L.dense_apply(p["wo"], out.reshape(b, 1, cfg.q_dim).astype(x.dtype))
+    return y, new_cache
+
+
+def ragged_attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
+                             positions, *, impl="reference"):
+    """Per-row-position variant of :func:`attn_decode_apply` for
+    sliding-window ring caches: rows write at their own ``positions[b]``
+    instead of one shared scalar ``t`` (continuous batching).  Window
+    layers are already O(window) per row, so paging buys nothing there;
+    full-attention layers must go through
+    :func:`paged_attn_decode_apply` instead."""
+    assert spec.window is not None, \
+        "ragged decode is ring-cache only; use paged_attn_decode_apply"
+    b = x.shape[0]
+    pos = positions[:, None]
+    q, k, v = _project_qkv(p, cfg, x, x, pos, pos, use_rope=True)
+    cap = cache["k"].shape[1]
+    slot = positions % cap
+    rows = jnp.arange(b)
+    new_cache = {
+        "k": cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype)),
+    }
+    out = ops.decode_mha(q[:, 0], new_cache["k"], new_cache["v"],
+                         cache_len=positions + 1, window=spec.window,
+                         impl=impl)
+    y = L.dense_apply(p["wo"], out.reshape(b, 1, cfg.q_dim).astype(x.dtype))
+    return y, new_cache
+
+
 def attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache, t, *,
                       impl="reference"):
     """One-token decode.  x: (B, 1, D); t: scalar int32 position.

@@ -135,22 +135,47 @@ def decode_step(params, cfg: ModelConfig, token, caches, t, *,
 
 def decode_and_sample_step(params, cfg: ModelConfig, token, caches, t, key,
                            *, temperature: float = 1.0, sampler: str = "cdf",
+                           top_k: int = 0, top_p: float = 1.0,
                            impl="reference"):
     """Fused decode + sample: one decode step on ``token`` followed by
     sampling the *next* token and its logprob from the produced logits,
-    without materializing a full ``log_softmax`` (``ops.sample_logits``).
-    ``key=None`` means greedy.  Returns (next_token (B,), logprob (B,),
-    new_caches) — nothing vocab-sized escapes this function."""
+    without materializing a full ``log_softmax`` (``ops.sample_logits``,
+    including fused top-k/top-p truncation).  ``key=None`` means greedy.
+    Returns (next_token (B,), logprob (B,), new_caches) — nothing
+    vocab-sized escapes this function."""
     logits, caches = decode_step(params, cfg, token, caches, t, impl=impl)
     tok, lp = ops.sample_logits(logits, key, temperature=temperature,
-                                sampler=sampler, impl=impl)
+                                sampler=sampler, top_k=top_k, top_p=top_p,
+                                impl=impl)
+    return tok, lp, caches
+
+
+def paged_decode_and_sample_step(params, cfg: ModelConfig, token, caches,
+                                 block_table, positions, key, *,
+                                 temperature: float = 1.0,
+                                 sampler: str = "cdf", top_k: int = 0,
+                                 top_p: float = 1.0, impl="reference"):
+    """Fused decode + sample over paged caches with per-row positions.
+
+    token: (B,) the token each row consumes this step; positions: (B,) its
+    per-row position (rows advance independently — the continuous-batching
+    decode step); block_table: (B, M) physical block ids.  Returns
+    (next_token (B,), logprob (B,), new_caches)."""
+    x = L.embed_apply(params["embed"], token[:, None]).astype(cfg.dtype)
+    h, caches = T.stack_paged_decode(params["groups"], cfg, x, caches,
+                                     block_table, positions, impl=impl)
+    h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_of(params, cfg, h)[:, 0]
+    tok, lp = ops.sample_logits(logits, key, temperature=temperature,
+                                sampler=sampler, top_k=top_k, top_p=top_p,
+                                impl=impl)
     return tok, lp, caches
 
 
 def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
              rng=None, temperature: float = 1.0, impl="reference",
              fused: bool = True, eos_id: int | None = None,
-             sampler: str = "cdf"):
+             sampler: str = "cdf", top_k: int = 0, top_p: float = 1.0):
     """Greedy/sampled autoregressive generation after a prefill.
 
     Returns dict with tokens (B, T_new), logprobs (B, T_new), caches.
@@ -173,10 +198,17 @@ def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
     remaining tokens are forced to ``eos_id`` with logprob 0, and the loop
     exits as soon as every row is done.  The result gains a ``gen_mask``
     entry ((B, T_new) f32, 1.0 through each row's first EOS).
+
+    ``top_k`` / ``top_p`` truncate the sampling distribution inside the
+    fused sampler (mask-then-renormalize, see ``ops.sample_logits``);
+    returned logprobs stay full-distribution (PPO convention).
     """
     if eos_id is not None and not fused:
         raise ValueError("eos_id requires the fused decode loop "
                          "(fused=True); the legacy loop has no EOS exit")
+    if (top_k or top_p < 1.0) and not fused:
+        raise ValueError("top_k/top_p truncation requires the fused "
+                         "sampler (fused=True)")
     prompt_len = batch["tokens"].shape[1]
     max_len = prompt_len + num_new_tokens
     last_h, caches = prefill(params, cfg, batch, max_len, impl=impl)
@@ -210,7 +242,8 @@ def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
 
     tok0, lp0 = ops.sample_logits(logits0, keys[0] if rng is not None else
                                   None, temperature=temperature,
-                                  sampler=sampler, impl=impl)
+                                  sampler=sampler, top_k=top_k, top_p=top_p,
+                                  impl=impl)
 
     if eos_id is None:
         def body(carry, key):
@@ -218,7 +251,8 @@ def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
             ntok, lp, caches = decode_and_sample_step(
                 params, cfg, tok, caches, t,
                 key if rng is not None else None,
-                temperature=temperature, sampler=sampler, impl=impl)
+                temperature=temperature, sampler=sampler, top_k=top_k,
+                top_p=top_p, impl=impl)
             return (ntok, caches, t + 1), (ntok, lp)
 
         (_, caches, _), (toks, lps) = jax.lax.scan(
@@ -244,7 +278,8 @@ def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
         key = keys[i] if rng is not None else None
         ntok, lp, caches = decode_and_sample_step(
             params, cfg, tok, caches, prompt_len + i - 1, key,
-            temperature=temperature, sampler=sampler, impl=impl)
+            temperature=temperature, sampler=sampler, top_k=top_k,
+            top_p=top_p, impl=impl)
         ntok = jnp.where(done, eos_id, ntok)
         lp = jnp.where(done, 0.0, lp)
         tb = tb.at[:, i].set(ntok)
@@ -288,7 +323,8 @@ class BucketedGenerator:
     def __init__(self, cfg: ModelConfig, *, temperature: float = 1.0,
                  impl: str = "reference", fused: bool = True,
                  eos_id: int | None = None, pad_id: int = 0,
-                 sampler: str = "cdf", buckets=GEN_BUCKETS):
+                 sampler: str = "cdf", top_k: int = 0, top_p: float = 1.0,
+                 buckets=GEN_BUCKETS):
         if cfg.prefix_len and cfg.family != "encdec":
             # left-padding tokens would shift them out from under the
             # prefix_embeds splice (positions [0:prefix_len])
@@ -296,7 +332,7 @@ class BucketedGenerator:
                              "(vlm) configs; pad prompts upstream instead")
         self.cfg, self.temperature, self.impl = cfg, temperature, impl
         self.fused, self.eos_id, self.pad_id = fused, eos_id, pad_id
-        self.sampler = sampler
+        self.sampler, self.top_k, self.top_p = sampler, top_k, top_p
         self.buckets = buckets
         self._fns: dict = {}
         self.compiles = 0
@@ -313,7 +349,8 @@ class BucketedGenerator:
                                 rng=(k if sampled else None),
                                 temperature=self.temperature, impl=self.impl,
                                 fused=self.fused, eos_id=self.eos_id,
-                                sampler=self.sampler)
+                                sampler=self.sampler, top_k=self.top_k,
+                                top_p=self.top_p)
 
             fn = self._fns[key] = jax.jit(run)
         else:

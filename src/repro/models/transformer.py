@@ -115,6 +115,31 @@ def block_decode(p, cfg, spec, x, cache, t, *, impl="reference", cross=False):
     return x, new_cache
 
 
+def block_paged_decode(p, cfg, spec, x, cache, block_table, positions, *,
+                       impl="reference"):
+    """Single-token block step with per-row positions over paged caches.
+
+    Full-attention layers write/read through the shared block pool via
+    ``block_table``; window layers use their per-slot ring buffers;
+    recurrent mixers are position-free.  Returns (x, new_cache)."""
+    h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if spec.kind == ATTN:
+        if spec.window is None:
+            y, new_cache = A.paged_attn_decode_apply(
+                p["mixer"], cfg, spec, h, cache, block_table, positions,
+                impl=impl)
+        else:
+            y, new_cache = A.ragged_attn_decode_apply(
+                p["mixer"], cfg, spec, h, cache, positions, impl=impl)
+    elif spec.kind == LRU:
+        y, new_cache = R.lru_decode_apply(p["mixer"], cfg, h, cache)
+    else:
+        y, new_cache = S.ssm_decode_apply(p["mixer"], cfg, h, cache)
+    x = x + y
+    x, _ = _ffn(p, cfg, x)
+    return x, new_cache
+
+
 # -------------------------------------------------------------- scan groups
 
 def group_init(key, cfg: ModelConfig, specs, n: int, cross: bool = False):
@@ -221,6 +246,26 @@ def stack_prefill(groups_params, cfg: ModelConfig, x, positions, caches, *,
         (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), (gp, gc))
         new_caches.append(nc)
     return x, aux_total, new_caches
+
+
+def stack_paged_decode(groups_params, cfg: ModelConfig, x, caches,
+                       block_table, positions, *, impl="reference"):
+    """x: (B, 1, D); block_table: (B, M) int32; positions: (B,) int32
+    per-row token position.  Returns (x, new_caches)."""
+    new_caches = []
+    for (specs, n), gp, gc in zip(groups_of(cfg), groups_params, caches):
+        def body(xc, inp, specs=specs):
+            xc = ctx.constrain(xc, ctx.BATCH, None, None)
+            layer_p, cache = inp
+            out_cache = {}
+            for i, spec in enumerate(specs):
+                xc, out_cache[f"b{i}"] = block_paged_decode(
+                    layer_p[f"b{i}"], cfg, spec, xc, cache[f"b{i}"],
+                    block_table, positions, impl=impl)
+            return xc, out_cache
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches
 
 
 def stack_decode(groups_params, cfg: ModelConfig, x, caches, t, *,

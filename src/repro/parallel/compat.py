@@ -1,0 +1,38 @@
+"""Version compatibility shims for the jax mesh API (pinned jax 0.4.37).
+
+Same pattern as ``kernels/pallas_compat.py``: newer jax (>= 0.5) grew
+keyword arguments the pinned version lacks — here ``jax.make_mesh``'s
+``axis_types`` (``jax.sharding.AxisType``) — so callers go through one shim
+that degrades gracefully.  On 0.4.x every mesh axis already behaves like
+``AxisType.Auto`` (collectives are compiler-chosen), so dropping the
+argument preserves semantics for the ``Auto`` case this repo uses.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """``jax.make_mesh`` accepting (and, pre-0.5, dropping) ``axis_types``."""
+    if axis_types is not None and hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped axis (inside shard_map/pmap).
+
+    ``jax.lax.axis_size`` only exists on newer jax; on 0.4.x the idiom is
+    ``psum(1, axis)``, which constant-folds to a Python int."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on jax >= 0.5, None (implicit Auto) on
+    the pinned 0.4.x."""
+    if hasattr(jax.sharding, "AxisType"):
+        return (jax.sharding.AxisType.Auto,) * n
+    return None

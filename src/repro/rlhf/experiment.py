@@ -49,6 +49,18 @@ class ExperimentConfig:
     fused_sampling: bool = True  # fused decode+sample rollout hot path
     eos_id: Optional[int] = None  # enables EOS-early-exit generation
     sampler: str = "cdf"  # "cdf" (fast) or "gumbel" (seed-identical draws)
+    # truncated sampling, fused into ops.sample_logits (0 / 1.0 = off)
+    top_k: int = 0
+    top_p: float = 1.0
+    # serve-path engine (launch/serve.build_server): "bucketed" keeps the
+    # run-to-completion bucket loop; "continuous" uses the paged-KV
+    # continuous-batching engine
+    serve_mode: str = "continuous"
+    kv_block_size: int = 16  # tokens per paged-KV block
+    max_kv_blocks: int = 0  # total pool blocks (0 = worst-case auto-size)
+    # checkpoint every N iterations through checkpoint/manager.py (0 = off)
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
 
 
 class RLHFExperiment:
@@ -76,6 +88,11 @@ class RLHFExperiment:
         self._build_executors()
         self.engine = RuntimeEngine(self.graph, self.plan, self.executors,
                                     self.models, cost_model=self.cost)
+        self.iteration = 0
+        self.ckpt = None
+        if exp.checkpoint_every > 0:
+            from repro.checkpoint.manager import CheckpointManager
+            self.ckpt = CheckpointManager(exp.checkpoint_dir or "checkpoints")
 
     # ------------------------------------------------------------- models
     def _build_models(self):
@@ -108,7 +125,7 @@ class RLHFExperiment:
         gen_fn = jax.jit(lambda p, b, k: MDL.generate(
             p, a_cfg, b, num_new_tokens=exp.gen_len, rng=k,
             impl=rollout_impl, fused=exp.fused_sampling, eos_id=exp.eos_id,
-            sampler=exp.sampler))
+            sampler=exp.sampler, top_k=exp.top_k, top_p=exp.top_p))
         ref_fn = jax.jit(lambda p, toks: PPO.sequence_logprobs(
             p, a_cfg, toks, gen_start, impl=impl, remat=False))
         rew_fn = jax.jit(lambda p, toks, m: RWD.score_sequences(
@@ -178,4 +195,32 @@ class RLHFExperiment:
     def run_iteration(self, rng) -> dict:
         data = {"prompts": self.make_prompts(rng)}
         out = self.engine.run_iteration(data)
+        self.iteration += 1
+        if self.ckpt and self.iteration % self.exp.checkpoint_every == 0:
+            self.save_checkpoint()
         return out
+
+    # -------------------------------------------------------- checkpointing
+    def _checkpoint_trees(self) -> dict:
+        trees = {name: ms.params for name, ms in self.models.items()}
+        for name in ("actor", "critic"):
+            trees[f"{name}_opt"] = self.models[name].opt_state
+        return trees
+
+    def save_checkpoint(self):
+        """Snapshot all four models (+ trainable opt states) through the
+        fault-tolerant manager; I/O overlaps the next iteration."""
+        self.ckpt.save_async(self.iteration, self._checkpoint_trees(),
+                             extra={"iteration": self.iteration})
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Load the latest (or a specific) checkpoint back into the live
+        ``ModelState``s; returns the restored iteration number."""
+        self.ckpt.wait()
+        step, trees, extra = self.ckpt.restore(self._checkpoint_trees(), step)
+        for name, ms in self.models.items():
+            ms.params = trees[name]
+        for name in ("actor", "critic"):
+            self.models[name].opt_state = trees[f"{name}_opt"]
+        self.iteration = int(extra.get("iteration", step))
+        return self.iteration

@@ -1,5 +1,9 @@
 """Multi-device behaviours that need >1 XLA device: run in subprocesses with
-their own XLA_FLAGS (the main test process keeps the 1-device view)."""
+their own XLA_FLAGS (the main test process keeps the 1-device view).
+
+Mesh construction goes through ``repro.parallel.compat.make_mesh`` so the
+same tests run on the pinned jax 0.4.37 (no ``jax.sharding.AxisType``) and
+on >= 0.5 (explicit ``Auto`` axis types)."""
 
 import os
 import subprocess
@@ -28,8 +32,9 @@ def test_reshard_preserves_values_across_shardings():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.parallel.realloc_exec import reshard
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.parallel.compat import auto_axis_types, make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"),
+                         axis_types=auto_axis_types(2))
         x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
         a = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
         tree = {"w": a, "b": jax.device_put(x[:, 0], NamedSharding(mesh, P("data")))}
@@ -65,8 +70,9 @@ def test_tp_sharded_train_step_matches_single_device():
         # single device
         p1, o1, m1 = jax.jit(step)(p, opt, batch)
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.parallel.compat import auto_axis_types, make_mesh
+        mesh = make_mesh((2, 2), ("data", "model"),
+                         axis_types=auto_axis_types(2))
         rules = SH.ShardingRules()
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                            SH.param_specs(p, rules))
@@ -93,8 +99,8 @@ def test_pipeline_parallel_matches_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp
         from repro.parallel.pipeline import pipeline_apply, microbatch
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.parallel.compat import auto_axis_types, make_mesh
+        mesh = make_mesh((4,), ("stage",), axis_types=auto_axis_types(1))
         rng = jax.random.PRNGKey(0)
         L, D, B, MBS = 8, 16, 12, 6
         ws = jax.random.normal(rng, (L, D, D)) * 0.3
@@ -120,8 +126,8 @@ def test_compressed_psum_error_feedback():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.optim.grad import compressed_psum
-        mesh = jax.make_mesh((4,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.parallel.compat import auto_axis_types, make_mesh
+        mesh = make_mesh((4,), ("dp",), axis_types=auto_axis_types(1))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
 
         def f(gs, err):

@@ -74,6 +74,70 @@ def test_sample_logits_rejects_bad_sampler():
     lg = jnp.zeros((1, 8))
     with pytest.raises(ValueError):
         ops.sample_logits(lg, jax.random.PRNGKey(0), sampler="nope")
+    with pytest.raises(ValueError):
+        ops.sample_logits(lg, jax.random.PRNGKey(0), top_p=0.0)
+    with pytest.raises(ValueError):
+        ops.sample_logits(lg, jax.random.PRNGKey(0), top_k=-1)
+
+
+@pytest.mark.parametrize("sampler", ["cdf", "gumbel"])
+def test_sample_logits_top_k_truncates(sampler):
+    """Every draw lands in the top-k set; logprobs stay full-distribution
+    (PPO convention)."""
+    b, v, k = 4, 64, 3
+    lg = jax.random.normal(jax.random.PRNGKey(9), (b, v)) * 3
+    topk = np.argsort(np.asarray(lg), axis=-1)[:, -k:]
+    keys = jax.random.split(jax.random.PRNGKey(10), 64)
+    full_lp = np.asarray(jax.nn.log_softmax(lg, -1))
+    for key in keys[:16]:
+        tok, lp = ops.sample_logits(lg, key, sampler=sampler, top_k=k)
+        tok = np.asarray(tok)
+        for row in range(b):
+            assert tok[row] in topk[row]
+        np.testing.assert_allclose(np.asarray(lp),
+                                   full_lp[np.arange(b), tok], atol=1e-5)
+
+
+def test_sample_logits_top_p_truncates():
+    """top-p keeps the smallest prefix of the sorted distribution with
+    cumulative mass >= p (always at least the argmax)."""
+    lg = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    keys = jax.random.split(jax.random.PRNGKey(11), 256)
+    toks = np.asarray(jax.vmap(
+        lambda k: ops.sample_logits(lg, k, top_p=0.75)[0][0])(keys))
+    assert set(toks.tolist()) == {0, 1}  # 0.5 + 0.3 covers 0.75
+    # degenerate p -> greedy
+    toks = np.asarray(jax.vmap(
+        lambda k: ops.sample_logits(lg, k, top_p=1e-6)[0][0])(keys[:32]))
+    assert set(toks.tolist()) == {0}
+
+
+def test_sample_logits_top_k_distribution_renormalized():
+    """Within the kept set, frequencies track the renormalized softmax."""
+    v, k = 8, 3
+    lg = jax.random.normal(jax.random.PRNGKey(12), (1, v)) * 2
+    probs = np.asarray(jax.nn.softmax(lg, -1))[0]
+    keep = np.argsort(probs)[-k:]
+    renorm = np.zeros(v)
+    renorm[keep] = probs[keep] / probs[keep].sum()
+    keys = jax.random.split(jax.random.PRNGKey(13), 512)
+    toks = np.asarray(jax.vmap(
+        lambda kk: ops.sample_logits(lg, kk, top_k=k)[0][0])(keys))
+    freq = np.bincount(toks, minlength=v) / len(toks)
+    assert np.max(np.abs(freq - renorm)) < 0.08, (freq, renorm)
+
+
+def test_generate_top_k_requires_fused():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    p = init_params(RNG, cfg)
+    batch = synth_batch(jax.random.PRNGKey(1), cfg, 8, 1, "prefill")
+    with pytest.raises(ValueError):
+        generate(p, cfg, batch, num_new_tokens=2, rng=RNG, fused=False,
+                 top_k=4)
+    out = generate(p, cfg, batch, num_new_tokens=4, rng=RNG, top_k=4,
+                   top_p=0.9)
+    assert out["tokens"].shape == (1, 4)
+    assert bool(jnp.all(out["logprobs"] <= 0))
 
 
 # ----------------------------------------------------------------- generate

@@ -90,6 +90,30 @@ def test_engine_replan_changes_assignment(exp):
     assert "rewards" in out
 
 
+def test_checkpoint_every_wires_through_manager(tmp_path):
+    """checkpoint_every=1 saves through checkpoint/manager.py after each
+    iteration, and restore_checkpoint round-trips the live model states."""
+    actor = ARCHS["qwen2-0.5b"].reduced()
+    cfg = ExperimentConfig(batch=2, prompt_len=8, gen_len=4, search_iters=0,
+                           ppo=PPOHyperparameters(n_minibatches=1),
+                           checkpoint_every=1,
+                           checkpoint_dir=str(tmp_path / "ckpt"))
+    e = RLHFExperiment(actor, actor, CLUSTER, cfg, search=False)
+    assert e.ckpt is not None
+    e.run_iteration(jax.random.PRNGKey(0))
+    e.ckpt.wait()
+    assert e.ckpt.latest_step() == 1
+    saved = jax.tree.map(np.asarray, e.models["actor"].params)
+    e.run_iteration(jax.random.PRNGKey(1))  # params move past the snapshot
+    e.ckpt.wait()
+    assert e.ckpt.latest_step() == 2
+    it = e.restore_checkpoint(step=1)
+    assert it == 1
+    for a, b in zip(jax.tree.leaves(saved),
+                    jax.tree.leaves(e.models["actor"].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_reallocation_invoked_between_calls():
     """With distinct per-call assignments the engine must reallocate params."""
     actor = ARCHS["qwen2-0.5b"].reduced()
