@@ -1,85 +1,241 @@
-"""Fig. 12 analogue: runtime-estimator accuracy against *measured* wall times.
+"""Fig. 12 analogue grown into the calibration validation harness.
 
-Real hardware is absent, so the validation runs tiny models on the CPU device:
-profile ONE calibration point per call type (the paper's profiling step),
-scale the analytic model, then check (a) relative error on held-out workloads
-and (b) rank preservation — the property the paper argues actually matters.
+Real hardware is absent, so the validation runs tiny models on the CPU
+device and closes the paper's profile -> estimate loop end-to-end:
+
+  1. ``profile_model`` measures the config zoo over the profiling grid and
+     ``calibrate``/``fit_type_scales`` fit the analytic model to it.
+  2. The fitted entry round-trips through an on-disk ``ProfileStore``
+     (save -> reload -> identical estimates) — the artifact any later
+     search on this hardware would pick up.
+  3. Every workload (grid + held-out) is re-measured fresh, and the
+     *analytic* vs *calibrated* CostModel are compared on median relative
+     error and pairwise rank preservation — the property the paper argues
+     actually matters for plan search.
+
+CLI (CI runs ``--smoke`` and uploads the JSON artifact):
+
+    PYTHONPATH=src python -m benchmarks.estimator_acc [--smoke] [--json out]
+
+``run()`` keeps the ``benchmarks/run.py --only fig12`` row interface.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import hw
 from repro.configs import ARCHS
 from repro.core.dfg import FunctionCall, INFERENCE, TRAIN, Workload
 from repro.core.estimator import CostModel, Profile
 from repro.core.plan import Assignment, Cluster, DeviceMesh, ParallelStrategy
+from repro.core.profiler import (ProfileEntry, ProfileStore, calibrate,
+                                 fit_type_scales, measure, profile_model)
 from repro.models import init_params, lm_loss, synth_batch
 from repro.optim import adamw
 from repro.parallel.steps import make_train_step
 
+ASG = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
 
-def _measure(fn, *args, reps=3):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2] if xs else None
+
+
+def _rank_agreement(measured, estimated, tie_tol=0.10):
+    """Fraction of workload pairs whose measured order the estimates keep.
+
+    Pairs whose measured times are within ``tie_tol`` relative difference
+    are statistical ties — rerunning the measurement can flip them — and
+    are excluded for every model alike; ordering claims only make sense on
+    distinguishable pairs (the paper's "same relative ordering").
+    """
+    n = len(measured)
+    agree = pairs = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            if (abs(measured[i] - measured[j])
+                    <= tie_tol * max(measured[i], measured[j])):
+                continue
+            pairs += 1
+            agree += ((measured[i] < measured[j])
+                      == (estimated[i] < estimated[j]))
+    return agree / max(pairs, 1)
+
+
+def _roundtrip(entry, cluster, calls, store_path):
+    """Persist ``entry``, reload from disk, and check the reloaded cost
+    model reproduces every estimate bit-for-bit."""
+    store = ProfileStore(store_path)
+    store.put(entry, merge=False)
+    store.save()
+    entry2 = ProfileStore(store_path).get(entry.model_name,
+                                          entry.fingerprint)
+    if entry2 is None:
+        return False
+    a, b = entry.cost_model(cluster), entry2.cost_model(cluster)
+    return all(a.call_time(c, ASG) == b.call_time(c, ASG) for c in calls)
+
+
+def evaluate(config_names=("qwen2-0.5b",), grid_batches=(2, 4),
+             grid_seqs=(16, 32), heldout=((8, 64), (2, 64)), reps=3,
+             profile_path=None):
+    """Run the harness; returns (csv_rows, json_summary)."""
+    cluster = Cluster(n_nodes=1, devs_per_node=1, chip=hw.HOST_CPU)
+    fingerprint = hw.fingerprint()
+    rows, summary = [], {"fingerprint": fingerprint, "configs": {},
+                         "grid": {"batches": list(grid_batches),
+                                  "seqs": list(grid_seqs)},
+                         "heldout": [list(w) for w in heldout]}
+    all_metrics = []
+
+    for name in config_names:
+        cfg = ARCHS[name].reduced()
+        table = profile_model(cfg, batches=grid_batches, seqs=grid_seqs)
+        profile = calibrate(cfg, table, cluster)
+        scales = fit_type_scales(cfg, table, cluster, profile)
+        entry = ProfileEntry(cfg.name, fingerprint, time.time(), table,
+                             profile, scales)
+        analytic = CostModel(cluster, Profile())
+        calibrated = entry.cost_model(cluster)
+
+        # fresh measurements over grid + held-out workloads
+        opt_cfg = adamw.AdamWConfig()
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw.init(opt_cfg, p)
+        train = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+        infer = jax.jit(lambda pp, b: lm_loss(pp, cfg, b, remat=False)[0])
+
+        grid_pts = [(b, s) for b in grid_batches for s in grid_seqs]
+        workloads = [(b, s, True) for b, s in grid_pts] + \
+                    [(b, s, False) for b, s in heldout]
+        points = []
+        for kind in ("train", "inference"):
+            for b, s, on_grid in workloads:
+                call = FunctionCall("c", "m",
+                                    TRAIN if kind == "train" else INFERENCE,
+                                    cfg, Workload(b, s, 0))
+                batch = synth_batch(jax.random.PRNGKey(2), cfg, s, b, "train")
+                t_m = (measure(train, p, opt, batch, reps=reps)
+                       if kind == "train"
+                       else measure(infer, p, batch, reps=reps))
+                points.append({
+                    "kind": kind, "batch": b, "seq": s, "on_grid": on_grid,
+                    "measured_s": t_m,
+                    "analytic_s": analytic.call_time(call, ASG),
+                    "calibrated_s": calibrated.call_time(call, ASG),
+                })
+
+        def errs(pts, key):
+            return [abs(pt[key] - pt["measured_s"]) / pt["measured_s"]
+                    for pt in pts]
+
+        grid_p = [pt for pt in points if pt["on_grid"]]
+        held_p = [pt for pt in points if not pt["on_grid"]]
+        meas = [pt["measured_s"] for pt in points]
+        metrics = {
+            "median_rel_err": {
+                "analytic": {"grid": _median(errs(grid_p, "analytic_s")),
+                             "heldout": _median(errs(held_p, "analytic_s")),
+                             "all": _median(errs(points, "analytic_s"))},
+                "calibrated": {"grid": _median(errs(grid_p, "calibrated_s")),
+                               "heldout": _median(errs(held_p, "calibrated_s")),
+                               "all": _median(errs(points, "calibrated_s"))},
+            },
+            "rank_agreement": {
+                "analytic": _rank_agreement(
+                    meas, [pt["analytic_s"] for pt in points]),
+                "calibrated": _rank_agreement(
+                    meas, [pt["calibrated_s"] for pt in points]),
+            },
+        }
+        m = metrics["median_rel_err"]
+        metrics["calibrated_improves"] = (
+            m["calibrated"]["grid"] < m["analytic"]["grid"]
+            and metrics["rank_agreement"]["calibrated"]
+            >= metrics["rank_agreement"]["analytic"])
+
+        calls = [FunctionCall("c", "m",
+                              TRAIN if pt["kind"] == "train" else INFERENCE,
+                              cfg, Workload(pt["batch"], pt["seq"], 0))
+                 for pt in points]
+        path = profile_path or os.path.join(
+            tempfile.mkdtemp(prefix="profile_store_"), "profile.json")
+        metrics["roundtrip_identical"] = _roundtrip(entry, cluster, calls,
+                                                    path)
+        summary["configs"][name] = {"points": points, "metrics": metrics,
+                                    "type_scales": scales,
+                                    "profile_store": path}
+        all_metrics.append(metrics)
+
+        for pt in points:
+            tag = "grid" if pt["on_grid"] else "heldout"
+            rel_a = abs(pt["analytic_s"] - pt["measured_s"]) / pt["measured_s"]
+            rel_c = (abs(pt["calibrated_s"] - pt["measured_s"])
+                     / pt["measured_s"])
+            rows.append((f"fig12/{name}/{pt['kind']}/"
+                         f"b{pt['batch']}s{pt['seq']}/{tag}",
+                         pt["measured_s"] * 1e6,
+                         f"analytic_rel={rel_a:.2f};calibrated_rel={rel_c:.2f}"))
+        rows.append((f"fig12/{name}/median_rel_err", 0.0,
+                     f"analytic={m['analytic']['grid']:.2f};"
+                     f"calibrated={m['calibrated']['grid']:.2f};"
+                     f"heldout_calibrated={m['calibrated']['heldout']:.2f}"))
+        ra = metrics["rank_agreement"]
+        rows.append((f"fig12/{name}/rank_agreement", 0.0,
+                     f"analytic={ra['analytic']:.2f};"
+                     f"calibrated={ra['calibrated']:.2f}"))
+        rows.append((f"fig12/{name}/roundtrip", 0.0,
+                     f"identical={metrics['roundtrip_identical']}"))
+
+    summary["overall"] = {
+        "calibrated_improves": all(m["calibrated_improves"]
+                                   for m in all_metrics),
+        "roundtrip_identical": all(m["roundtrip_identical"]
+                                   for m in all_metrics),
+    }
+    rows.append(("fig12/overall", 0.0,
+                 f"calibrated_improves={summary['overall']['calibrated_improves']};"
+                 f"roundtrip={summary['overall']['roundtrip_identical']}"))
+    return rows, summary
 
 
 def run():
-    cfg = ARCHS["qwen2-0.5b"].reduced()
-    cpu_chip = hw.ChipSpec(name="host-cpu", peak_flops_bf16=5e10,
-                           hbm_bytes=8e9, hbm_bw=2e10, ici_link_bw=1e9)
-    cluster = Cluster(n_nodes=1, devs_per_node=1, chip=cpu_chip)
-    asg = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
+    """benchmarks/run.py entry point (``--only fig12``)."""
+    return evaluate()[0]
 
-    opt_cfg = adamw.AdamWConfig()
-    p = init_params(jax.random.PRNGKey(0), cfg)
-    opt = adamw.init(opt_cfg, p)
-    train = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
-    infer = jax.jit(lambda pp, b: lm_loss(pp, cfg, b, remat=False)[0])
 
-    workloads = [(2, 32), (4, 32), (4, 64), (8, 64), (8, 128)]
-    rows, measured, analytic, kinds = [], [], [], []
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single config instead of the full zoo (CI-friendly)")
+    ap.add_argument("--json", default=None,
+                    help="write the summary dict to this path")
+    ap.add_argument("--configs", default=None,
+                    help="comma list of ARCHS names (default: harness zoo)")
+    args = ap.parse_args()
 
-    base = CostModel(cluster, Profile())
-    for kind in ("train", "inference"):
-        for b, s in workloads:
-            w = Workload(b, s, 0)
-            call = FunctionCall("c", "m", TRAIN if kind == "train" else
-                                INFERENCE, cfg, w)
-            batch = synth_batch(jax.random.PRNGKey(2), cfg, s, b, "train")
-            if kind == "train":
-                t_m = _measure(train, p, opt, batch)
-            else:
-                t_m = _measure(infer, p, batch)
-            measured.append(t_m)
-            analytic.append(base.call_time(call, asg))
-            kinds.append((kind, b, s))
+    if args.configs:
+        names = tuple(args.configs.split(","))
+    elif args.smoke:
+        names = ("qwen2-0.5b",)
+    else:
+        names = ("qwen2-0.5b", "granite-moe-1b-a400m")
+    rows, summary = evaluate(config_names=names)
 
-    # calibration = median measured/analytic ratio (the paper fits per-layer
-    # profiles; one global scale is the 1-parameter analogue)
-    ratios = sorted(m / a for m, a in zip(measured, analytic))
-    scale = ratios[len(ratios) // 2]
-    estimated = [a * scale for a in analytic]
-    for (kind, b, s), t_m, t_e in zip(kinds, measured, estimated):
-        rel = abs(t_e - t_m) / t_m
-        rows.append((f"fig12/{kind}/b{b}s{s}", t_m * 1e6,
-                     f"estimated_us={t_e*1e6:.0f},rel_err={rel:.2f}"))
+    from benchmarks.common import emit
+    emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
 
-    # rank preservation (paper: "same relative ordering")
-    order_m = sorted(range(len(measured)), key=lambda i: measured[i])
-    order_e = sorted(range(len(estimated)), key=lambda i: estimated[i])
-    n = len(measured)
-    agree = sum(1 for i in range(n) for j in range(i + 1, n)
-                if (measured[i] < measured[j]) == (estimated[i] < estimated[j]))
-    total = n * (n - 1) // 2
-    rows.append(("fig12/rank_agreement", 0.0,
-                 f"pairwise_agreement={agree/total:.2f}"))
-    return rows
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ def _timeit(fn, *args, reps: int = 4):
 
 
 def bench_rollout(batch=8, prompt_len=32, gen_len=64, vocab=32768, reps=4):
+    """Returns (csv_rows, json_summary); the summary feeds back into the
+    calibration profile via ``core.profiler.fold_rollout_summary``."""
     import jax
     from repro.configs import ARCHS
     from repro.models.model import generate, init_params, synth_batch
@@ -44,7 +46,9 @@ def bench_rollout(batch=8, prompt_len=32, gen_len=64, vocab=32768, reps=4):
                      f"tok_s={tps[name]:.0f}"))
     rows.append(("rollout/speedup", 0.0,
                  f"fused_over_seed={tps['fused'] / tps['seed']:.2f}x"))
-    return rows
+    summary = {"model": cfg.name, "batch": batch, "prompt_len": prompt_len,
+               "gen_len": gen_len, "tok_s": tps}
+    return rows, summary
 
 
 def bench_bucketed(gen_len=8):
@@ -182,15 +186,27 @@ def bench_realloc_overlap(n_devices: int = 4):
 
 
 def run():
-    return (bench_rollout() + bench_bucketed() + bench_realloc_overlap())
+    return (bench_rollout()[0] + bench_bucketed() + bench_realloc_overlap())
 
 
 if __name__ == "__main__":
     import argparse
+    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--realloc-only", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write the rollout summary dict to this path "
+                         "(foldable into a calibration profile via "
+                         "core.profiler.fold_rollout_summary)")
     args = ap.parse_args()
 
     from benchmarks.common import emit
-    emit(_realloc_rows() if args.realloc_only else run())
+    if args.realloc_only:
+        emit(_realloc_rows())
+    else:
+        rows, summary = bench_rollout()
+        emit(rows + bench_bucketed() + bench_realloc_overlap())
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2)

@@ -91,8 +91,10 @@ def bench_serve(n_req=24, n_slots=8, block_size=16, max_prompt=28,
 
     tok_s_b, tok_s_c = useful / dt_b, useful / dt_c
     summary = {
+        "model": cfg.name,
         "workload": {"requests": n_req, "useful_tokens": useful,
-                     "max_new": max(new), "mean_new": sum(new) / n_req},
+                     "max_new": max(new), "mean_new": sum(new) / n_req,
+                     "mean_prompt": sum(len(p) for p in prompts) / n_req},
         "bucketed": {"tok_s": tok_s_b, "kv_peak_bytes": kv_b,
                      "wall_s": dt_b},
         "continuous": {"tok_s": tok_s_c, "kv_peak_bytes": kv_c,

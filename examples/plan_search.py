@@ -1,30 +1,36 @@
-"""Execution-plan search showcase: reproduce the paper's 7B+7B / 70B+7B plan
-tables (Tables 2-5) in the simulator and print searched vs. heuristic plans
-with their estimated iteration times.
+"""Execution-plan search showcase, analytic and profile-calibrated.
+
+Part 1 (paper Tables 2-5): search plans for the 7B+7B / 70B+7B PPO setups in
+the simulator and print searched vs. heuristic plans with their estimated
+iteration times — pure analytic estimator, target-hardware constants.
+
+Part 2 (paper §5.1, docs/CALIBRATION.md): the calibrated path on THIS host —
+load-or-profile a tiny model into a persistent ProfileStore, search with the
+calibrated CostModel, and print estimated (calibrated vs analytic) and
+simulated times for the winning plan.
 
     PYTHONPATH=src python examples/plan_search.py [--model 7b|70b] [--gpus 16]
+        [--iters 600] [--profile .cache/plan_search_profile.json] [--smoke]
+
+Runs on CPU in under a minute (first run profiles for a few seconds; later
+runs reuse the persisted profile).
 """
 
 import argparse
 import time
 
 from repro import hw
+from repro.configs import ARCHS
 from repro.configs.llama import PAPER_SIZES, critic_of, LLAMA_7B
 from repro.core.dfg import build_ppo
 from repro.core.estimator import CostModel
 from repro.core.plan import Cluster
-from repro.core.search import heuristic_plan, mcmc_search
+from repro.core.profiler import ProfileStore, profile_and_store
+from repro.core.search import heuristic_plan, mcmc_search, search
 from repro.core.simulator import max_mem_per_device, simulate
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="7b", choices=list(PAPER_SIZES))
-    ap.add_argument("--gpus", type=int, default=16)
-    ap.add_argument("--iters", type=int, default=2000)
-    ap.add_argument("--ctx", type=int, default=2048)
-    args = ap.parse_args()
-
+def paper_scale_search(args):
     actor = PAPER_SIZES[args.model]
     critic = critic_of(LLAMA_7B)
     cluster = Cluster(n_nodes=args.gpus // 8, devs_per_node=8, chip=hw.H100,
@@ -54,6 +60,59 @@ def main():
     print(f"\nrealloc total: {sim_b.realloc_time:.2f}s  "
           f"data xfer: {sim_b.xfer_time:.3f}s "
           f"(paper Fig. 11: both minor vs. compute)")
+
+
+def calibrated_search(args):
+    """Profile -> persist -> calibrated search on the executing hardware."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(n_nodes=1, devs_per_node=1, chip=hw.HOST_CPU)
+    store = ProfileStore(args.profile)
+    src = ("loaded from store" if store.get(cfg.name) is not None
+           else "profiled fresh")
+    entry = profile_and_store(cfg, store, cluster,
+                              batches=(2,), seqs=(16, 32))
+    print(f"\n--- calibrated search on {hw.fingerprint()} "
+          f"(profile {src}: {args.profile}) ---")
+    print(f"fitted per-call-type scales: "
+          f"{ {k: round(v, 1) for k, v in entry.type_scales.items()} }")
+
+    dfg = build_ppo(cfg, cfg, batch=2, prompt_len=16, gen_len=16,
+                    n_minibatches=2)
+    cost_cal = entry.cost_model(cluster)
+    res = search(dfg, cluster, cost_cal, iters=args.cal_iters, seed=0,
+                 log=print)
+    cost_ana = CostModel(cluster)
+    sim_cal = simulate(dfg, res.best_plan, cost_cal)
+    sim_ana = simulate(dfg, res.best_plan, cost_ana)
+    print(f"best plan estimated iteration time: "
+          f"calibrated {sim_cal.total_time*1e3:.1f}ms vs "
+          f"analytic {sim_ana.total_time*1e3:.1f}ms "
+          f"(x{sim_cal.total_time/max(sim_ana.total_time, 1e-12):.0f} — the "
+          f"profile is what ties the estimate to this host)")
+    for call in dfg.calls:
+        asg = res.best_plan.assignments[call.name]
+        print(f"  {call.name:14s} est calibrated "
+              f"{cost_cal.call_time(call, asg)*1e3:8.2f}ms   "
+              f"analytic {cost_ana.call_time(call, asg)*1e3:8.2f}ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="7b", choices=list(PAPER_SIZES))
+    ap.add_argument("--gpus", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--cal-iters", type=int, default=150)
+    ap.add_argument("--ctx", type=int, default=2048)
+    ap.add_argument("--profile", default=".cache/plan_search_profile.json",
+                    help="ProfileStore path (persists across runs)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: fewer search iterations")
+    args = ap.parse_args()
+    if args.smoke:
+        args.iters, args.cal_iters = 100, 50
+
+    paper_scale_search(args)
+    calibrated_search(args)
 
 
 if __name__ == "__main__":

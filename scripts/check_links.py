@@ -1,0 +1,62 @@
+"""Markdown link checker for the docs (CI step; stdlib only).
+
+Verifies that every relative markdown link target in the given files /
+directories exists on disk, resolving each link against the file that
+contains it.  External (http/https/mailto) links and pure #anchors are
+skipped — CI must not flake on the network.
+
+    python scripts/check_links.py README.md docs
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — ignore images' leading ! (same target rules apply anyway)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(root, n)
+        else:
+            yield p
+
+
+def check(paths) -> list[str]:
+    errors = []
+    for path in md_files(paths):
+        with open(path) as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#", 1)[0]  # strip section anchor
+            if not target:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                errors.append(f"{path}: broken link -> {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    paths = sys.argv[1:] or ["README.md", "docs"]
+    errors = check(paths)
+    for e in errors:
+        print(e)
+    checked = len(list(md_files(paths)))
+    print(f"link-check: {checked} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,12 +4,21 @@ The paper profiles per-layer fwd/bwd/comm times on the real cluster and
 interpolates.  Without hardware in this container, the estimator is an
 *analytic roofline model* over the same structure — per-layer FLOPs / HBM
 bytes / collective bytes derived from the ModelConfig, scaled by the hardware
-constants in ``repro.hw`` — with a calibration table hook (``Profile``) that
-plays the role of the paper's profiler when measurements exist.
+constants in ``repro.hw`` — with two calibration hooks that play the role of
+the paper's profiler when measurements exist:
+
+  * ``Profile`` — global scale factors fitted by ``core.profiler.calibrate``.
+  * measurement feedback — ``CostModel.record_measurement`` folds measured
+    call times (from ``core.profiler.profile_model``, live
+    ``RuntimeEngine`` CallRecords, or the benchmark JSON artifacts) into a
+    ``ProfileTable``; ``refit`` recomputes per-call-type scale multipliers;
+    exact measured hits for a (call type, workload, assignment) override the
+    analytic estimate entirely (see docs/CALIBRATION.md).
 
 Estimates, like the paper's, only need to (a) rank plans correctly and
-(b) stay within ~25% of reality; EXPERIMENTS.md validates rank preservation
-against the dry-run roofline terms.
+(b) stay within ~25% of reality; ``benchmarks/estimator_acc.py`` validates
+median relative error and rank preservation of the analytic vs calibrated
+model against measured wall times.
 """
 
 from __future__ import annotations
@@ -45,6 +54,8 @@ class Profile:
 
 @dataclasses.dataclass(frozen=True)
 class CallCost:
+    """Analytic roofline terms of one call.  All fields are seconds."""
+
     compute: float
     hbm: float
     comm: float
@@ -55,6 +66,17 @@ class CallCost:
         # compute and HBM traffic overlap poorly at these intensities; take
         # the max of the two rooflines, then add exposed comm + bubbles.
         return max(self.compute, self.hbm) + self.comm + self.bubble
+
+
+def assignment_key(asg: Assignment) -> str:
+    """Serializable identity of an assignment for measurement keying.
+
+    Cost is invariant to *where* a mesh sits (only its shape and the
+    strategy matter), so the key is ``"n{nodes}x{devs}:{strategy}"`` —
+    measurements taken under one assignment transfer to any congruent one.
+    """
+    m, s = asg.mesh, asg.strategy
+    return f"n{m.node_count}x{m.dev_count}:{s}"
 
 
 # --------------------------------------------------------------- workload math
@@ -104,9 +126,24 @@ def kv_cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> float:
 # --------------------------------------------------------------- cost model
 
 class CostModel:
-    def __init__(self, cluster: Cluster, profile: Profile | None = None):
+    """Per-call time/memory estimates over a cluster.
+
+    ``table`` (a ``core.profiler.ProfileTable`` or anything with the same
+    ``lookup_exact``/``add`` duck type) and ``type_scales`` (per-call-type
+    multipliers, dimensionless) make the model *calibrated*: measured times
+    recorded via ``record_measurement`` override or rescale the analytic
+    roofline.  Both default to empty, which reproduces the pure analytic
+    model bit-for-bit.
+    """
+
+    def __init__(self, cluster: Cluster, profile: Profile | None = None,
+                 table=None, type_scales: dict[str, float] | None = None):
         self.cluster = cluster
         self.prof = profile or Profile()
+        self.table = table
+        self.type_scales = dict(type_scales or {})
+        # call_type -> [(measured_s, analytic_s)] fed by record_measurement
+        self._samples: dict[str, list[tuple[float, float]]] = {}
 
     # ---- helper bandwidths -------------------------------------------------
     def _tp_bw(self, mesh) -> float:
@@ -126,7 +163,84 @@ class CostModel:
         return self._generate_cost(call.config, call.workload, asg)
 
     def call_time(self, call: FunctionCall, asg: Assignment) -> float:
-        return self.call_cost(call, asg).total
+        """Estimated wall time of one call in seconds.
+
+        Resolution order (paper §5.1): (1) an exact measured hit for this
+        (call type, batch, seq_len, assignment shape) in ``table``; (2) the
+        analytic ``CallCost`` total scaled by the refitted per-call-type
+        multiplier (1.0 until ``refit`` has run).
+        """
+        if self.table is not None:
+            hit = self.table.lookup_exact(
+                call.call_type, call.workload.batch, call.workload.seq_len,
+                self._exact_key(call, asg))
+            if hit is not None:
+                return hit
+        return (self.call_cost(call, asg).total
+                * self.type_scales.get(call.call_type, 1.0))
+
+    def _exact_key(self, call: FunctionCall, asg: Assignment) -> str:
+        """Exact-hit key for a call: the assignment shape, qualified by the
+        call's model name when it differs from the table's family — calls of
+        different models with identical workloads (e.g. PPO's reward_inf vs
+        ref_inf with distinct configs) must never share measurements."""
+        key = assignment_key(asg)
+        owner = getattr(self.table, "model_name", None)
+        if (call.config is not None and owner is not None
+                and call.config.name != owner):
+            key = f"{call.config.name}|{key}"
+        return key
+
+    def analytic_call_time(self, call: FunctionCall, asg: Assignment) -> float:
+        """Calibrated analytic estimate in seconds, *ignoring* exact measured
+        hits — what ``call_time`` would return for a congruent but unmeasured
+        assignment.  Used to report estimated-vs-measured error."""
+        return (self.call_cost(call, asg).total
+                * self.type_scales.get(call.call_type, 1.0))
+
+    # ---- measurement feedback (profile -> estimate loop) ---------------------
+    def record_measurement(self, call: FunctionCall, asg: Assignment,
+                           seconds: float) -> None:
+        """Fold one measured call execution (wall seconds) into the model.
+
+        The sample joins the per-call-type pool used by ``refit`` and, when a
+        ``table`` is attached, becomes an exact-hit entry for this workload +
+        assignment shape.  Calls without a ModelConfig (toy graphs) are
+        ignored — no analytic reference exists for them.
+        """
+        if call.config is None or seconds <= 0.0:
+            return
+        analytic = self.call_cost(call, asg).total
+        self._samples.setdefault(call.call_type, []).append(
+            (seconds, analytic))
+        if self.table is not None:
+            w = call.workload
+            # foreign-model calls get a qualified exact-hit key and stay out
+            # of the table's interpolation grid (one model family per grid)
+            owner = getattr(self.table, "model_name", None)
+            self.table.add(call.call_type, w.batch, w.seq_len, seconds,
+                           asg_key=self._exact_key(call, asg),
+                           grid=owner is None or call.config.name == owner)
+
+    def refit(self, min_samples: int = 1) -> dict[str, float]:
+        """Recompute ``type_scales`` from recorded measurements.
+
+        Per call type with >= ``min_samples`` samples, the scale is the
+        median measured/analytic ratio (dimensionless) — the one-parameter
+        analogue of the paper's per-layer profile fit, robust to stragglers.
+        Returns the updated mapping.
+        """
+        for ct, samples in self._samples.items():
+            if len(samples) < min_samples:
+                continue
+            ratios = sorted(m / a for m, a in samples if a > 0)
+            if ratios:
+                self.type_scales[ct] = ratios[len(ratios) // 2]
+        return self.type_scales
+
+    def n_measurements(self) -> int:
+        """Total recorded measurement samples across call types."""
+        return sum(len(v) for v in self._samples.values())
 
     def _chip(self):
         return self.cluster.chip

@@ -26,6 +26,12 @@ Fault-tolerance hooks:
   * ``checkpoint_every`` saves model states through a CheckpointManager
   * a failed call (exception) is retried once after reallocating its model's
     parameters from the last good location
+
+Closed-loop calibration (paper §5.1 + docs/CALIBRATION.md): with
+``recalibrate_every=N`` the engine folds its own CallRecords back into the
+cost model at iteration boundaries, refits the per-call-type scales, and
+replans onto a candidate plan when the refitted estimates flip the
+predicted ranking.
 """
 
 from __future__ import annotations
@@ -72,12 +78,24 @@ class RuntimeEngine:
                  sharding_for: Optional[Callable] = None,
                  straggler_factor: float = 10.0,
                  on_straggler: Optional[Callable] = None,
-                 prefetch_realloc: bool = True):
+                 prefetch_realloc: bool = True,
+                 recalibrate_every: int = 0,
+                 plan_candidates: Optional[list[ExecutionPlan]] = None,
+                 on_recalibrate: Optional[Callable] = None):
         """``executors[name](model_state, inputs: dict) -> dict`` runs one
         call; TRAIN executors mutate model_state.params/opt_state in place.
         ``sharding_for(model_name, assignment)`` -> dst sharding tree (or
         None to skip physical resharding, e.g. single-device tests).
-        ``prefetch_realloc`` enables the overlapped-reallocation chains."""
+        ``prefetch_realloc`` enables the overlapped-reallocation chains.
+
+        ``recalibrate_every=N`` (opt-in; needs ``cost_model``) closes the
+        profile->estimate loop at runtime: once N new CallRecords exist at
+        an iteration boundary, their measured times are folded into the cost
+        model (``record_measurement`` + per-call-type ``refit``), the
+        current plan is re-ranked against ``plan_candidates`` under the
+        refitted estimates, and ``replan()`` fires when the predicted
+        ranking flips.  ``on_recalibrate(n, switched)`` observes each pass.
+        """
         self.dfg = dfg
         self.plan = plan
         self.executors = executors
@@ -87,6 +105,12 @@ class RuntimeEngine:
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler or (lambda *a: None)
         self.prefetch_realloc = prefetch_realloc
+        self.recalibrate_every = recalibrate_every
+        self.plan_candidates = list(plan_candidates or [])
+        self.on_recalibrate = on_recalibrate or (lambda *a: None)
+        self.recalibrations = 0
+        self.replans = 0
+        self._recorded_upto = 0  # records already folded into the cost model
         self.records: list[CallRecord] = []
         m = plan.cluster.devs_per_node
         self._dev_locks: dict[int, asyncio.Lock] = {}
@@ -282,7 +306,54 @@ class RuntimeEngine:
         self._model_locks = {m: asyncio.Lock() for m in self.models}
         self._model_users = {m: 0 for m in self.models}
         self._model_idle = {}
-        return asyncio.run(self._run_iteration_async(data))
+        out = asyncio.run(self._run_iteration_async(data))
+        if (self.recalibrate_every > 0 and self.cost is not None
+                and len(self.records) - self._recorded_upto
+                >= self.recalibrate_every):
+            self.recalibrate()
+        return out
+
+    # --------------------------------------------------------- recalibration
+    def recalibrate(self) -> bool:
+        """Fold unconsumed CallRecords into the cost model, refit its
+        per-call-type scales, and replan if a candidate plan now ranks ahead
+        of the current one.  Returns True when a plan switch happened.
+
+        Retried records are excluded — their span covers the failed attempt
+        plus re-reallocation, not the call.  Straggled records stay: the
+        flag is relative to the (possibly uncalibrated) current estimate,
+        and the median refit tolerates genuine outliers.
+        """
+        for r in self.records[self._recorded_upto:]:
+            call = self.dfg.by_name.get(r.name)
+            if call is None or r.retried:
+                continue
+            self.cost.record_measurement(call, self.plan.assignments[r.name],
+                                         r.end - r.start)
+        self._recorded_upto = len(self.records)
+        self.cost.refit()
+        self.recalibrations += 1
+        switched = self._maybe_replan()
+        self.on_recalibrate(self.recalibrations, switched)
+        return switched
+
+    def _maybe_replan(self) -> bool:
+        """Re-rank current plan vs candidates under the refitted estimates;
+        adopt a candidate only when it is strictly better (a ranking flip)."""
+        if not self.plan_candidates:
+            return False
+        from repro.core.simulator import simulate
+        cur_t = simulate(self.dfg, self.plan, self.cost).total_time
+        best, best_t = None, cur_t
+        for cand in self.plan_candidates:
+            t = simulate(self.dfg, cand, self.cost).total_time
+            if t < best_t:
+                best, best_t = cand, t
+        if best is None:
+            return False
+        self.replans += 1
+        self.replan(best)
+        return True
 
     # ------------------------------------------------------------ elasticity
     def replan(self, new_plan: ExecutionPlan):
@@ -312,5 +383,8 @@ class RuntimeEngine:
             "stragglers": sum(r.straggled for r in self.records),
             "retries": sum(r.retried for r in self.records),
             "prefetch_hits": sum(r.prefetch_hit for r in self.records),
+            # getattr: stats() also serves partially-constructed engines
+            "recalibrations": getattr(self, "recalibrations", 0),
+            "replans": getattr(self, "replans", 0),
             "calls": calls,
         }

@@ -19,7 +19,7 @@ import time as _time
 from typing import Callable, Optional
 
 from repro.core.dfg import DataflowGraph, GENERATE, TRAIN
-from repro.core.estimator import CostModel
+from repro.core.estimator import CostModel, assignment_key
 from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
                              ParallelStrategy, strategies_for)
 from repro.core.simulator import max_mem_per_device, simulate
@@ -33,6 +33,10 @@ class SearchResult:
     history: list[tuple[float, float]]  # (wall_clock_s, best_time_so_far)
     evals: int
     space_size: float
+    # one record per accepted (improved) plan when searching with a
+    # calibrated CostModel: estimated time, how much of it is backed by
+    # exact measurements, and the estimated-vs-measured error on those calls
+    accepted_log: list[dict] = dataclasses.field(default_factory=list)
 
 
 def candidate_assignments(dfg: DataflowGraph, cluster: Cluster,
@@ -183,6 +187,81 @@ def brute_force(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
             best, best_time = plan, t
     return SearchResult(best, best_time, math.inf,
                         [(_time.monotonic() - t0, best_time)], evals, space)
+
+
+# ----------------------------------------------------- calibrated entry point
+
+def _calibration_check(dfg: DataflowGraph, plan: ExecutionPlan,
+                       cost: CostModel) -> dict:
+    """Estimated-vs-measured agreement of one plan under a calibrated cost
+    model: for every call whose (type, workload, assignment shape) has an
+    exact measurement, compare the *analytic* estimate (what the searcher
+    would have used without that measurement) against the measured seconds."""
+    errs = []
+    for call in dfg.calls:
+        asg = plan.assignments[call.name]
+        if cost.table is None:
+            break
+        meas = cost.table.lookup_exact(
+            call.call_type, call.workload.batch, call.workload.seq_len,
+            assignment_key(asg))
+        if meas is None:
+            continue
+        est = cost.analytic_call_time(call, asg)
+        errs.append(abs(est - meas) / meas)
+    errs.sort()
+    return {
+        "measured_frac": len(errs) / max(len(dfg.calls), 1),
+        "median_rel_err": errs[len(errs) // 2] if errs else None,
+    }
+
+
+def search(dfg: DataflowGraph, cluster: Cluster,
+           cost: Optional[CostModel] = None, *,
+           profile_store=None, model_cfg=None,
+           log: Optional[Callable[[str], None]] = None,
+           **mcmc_kw) -> SearchResult:
+    """Plan search with optional profile calibration — the paper's
+    profile -> estimate -> search pipeline in one call.
+
+    ``cost`` may be a pre-calibrated CostModel; alternatively pass a
+    ``profile_store`` (core/profiler.ProfileStore) plus the ``model_cfg``
+    whose persisted entry (this hardware's fingerprint) calibrates a fresh
+    one.  Falls back to the pure analytic model when neither is available.
+    Every accepted improvement is appended to ``SearchResult.accepted_log``
+    with its estimated time (seconds) and, where exact measurements cover
+    the plan's calls, the estimated-vs-measured relative error; ``log``
+    (default: no-op) receives the same records as formatted lines.
+    """
+    if cost is None:
+        entry = None
+        if profile_store is not None and model_cfg is not None:
+            entry = profile_store.get(model_cfg.name)
+        cost = (entry.cost_model(cluster) if entry is not None
+                else CostModel(cluster))
+    log = log or (lambda s: None)
+    accepted: list[dict] = []
+
+    user_cb = mcmc_kw.pop("on_improve", None)
+
+    def on_improve(it, plan, t):
+        rec = {"iter": it, "est_time_s": t}
+        rec.update(_calibration_check(dfg, plan, cost))
+        accepted.append(rec)
+        err = rec["median_rel_err"]
+        log(f"search: accepted plan @iter {it}: est {t:.3f}s, "
+            f"{rec['measured_frac']:.0%} of calls measured"
+            + (f", est-vs-measured median rel err {err:.2f}"
+               if err is not None else ""))
+        if user_cb:
+            user_cb(it, plan, t)
+
+    res = mcmc_search(dfg, cluster, cost, on_improve=on_improve, **mcmc_kw)
+    final = {"iter": None, "est_time_s": res.best_time}
+    final.update(_calibration_check(dfg, res.best_plan, cost))
+    accepted.append(final)
+    res.accepted_log = accepted
+    return res
 
 
 # ------------------------------------------------------- reference baselines

@@ -60,6 +60,32 @@ V5E = ChipSpec()
 POD = ClusterSpec((16, 16))
 TWO_PODS = ClusterSpec((2, 16, 16))
 
+# Nominal spec of the CPU host this container executes on — used wherever
+# the estimator/profiler loop runs against the local machine (calibration
+# benchmarks, examples, tests).  Deliberately rough: calibration, not the
+# constants, ties estimates to the host.
+HOST_CPU = ChipSpec(name="host-cpu", peak_flops_bf16=5e10, hbm_bytes=8e9,
+                    hbm_bw=2e10, ici_link_bw=1e9)
+
+
+def fingerprint() -> str:
+    """Stable identity of the hardware executing THIS process, used to key
+    persisted profiles (core/profiler.ProfileStore): measurements taken on
+    one machine must never calibrate the estimator on another.
+
+    Format: ``"<backend>-<n>x<device_kind>"`` (e.g. ``"cpu-1xcpu"``,
+    ``"tpu-8xTPU_v5e"``); falls back to the host architecture when no JAX
+    backend is importable.
+    """
+    try:
+        import jax
+        devs = jax.devices()
+        kind = devs[0].device_kind.replace(" ", "_")
+        return f"{jax.default_backend()}-{len(devs)}x{kind}"
+    except Exception:  # noqa: BLE001 — profiling is best-effort
+        import platform
+        return f"host-{platform.machine()}"
+
 # The paper's evaluation hardware (H100 + NVLink + 3.2Tbps RoCE), used by the
 # paper-faithful benchmark suite so Fig. 7/8/9 reproduce in the simulator with
 # the same memory/bandwidth regime the authors had.

@@ -61,6 +61,15 @@ class ExperimentConfig:
     # checkpoint every N iterations through checkpoint/manager.py (0 = off)
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
+    # closed-loop calibration (docs/CALIBRATION.md): path of a
+    # core/profiler.ProfileStore JSON.  When set and the store holds an
+    # entry for the actor config on this hardware, the plan search runs on
+    # the calibrated CostModel instead of the pure analytic one, and
+    # save_profile() persists runtime-refitted scales back.
+    profile_path: Optional[str] = None
+    # fold live CallRecords back into the cost model and re-rank the plan
+    # every N completed calls (0 = off); see RuntimeEngine.recalibrate
+    recalibrate_every: int = 0
 
 
 class RLHFExperiment:
@@ -76,6 +85,15 @@ class RLHFExperiment:
             actor_cfg, critic_cfg, batch=exp.batch, prompt_len=exp.prompt_len,
             gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches)
         self.cost = CostModel(cluster)
+        self.profile_store = None
+        if exp.profile_path:
+            from repro.core.profiler import ProfileStore, ProfileTable
+            self.profile_store = ProfileStore(exp.profile_path)
+            entry = self.profile_store.get(actor_cfg.name)
+            if entry is not None:
+                self.cost = entry.cost_model(cluster)
+            else:  # attach an empty table so live records accumulate into it
+                self.cost.table = ProfileTable(actor_cfg.name, {})
         if plan is None:
             if search:
                 plan = mcmc_search(self.graph, cluster, self.cost,
@@ -86,8 +104,17 @@ class RLHFExperiment:
         self.plan = plan
         self._build_models()
         self._build_executors()
+        candidates = []
+        if exp.recalibrate_every > 0:
+            try:  # the symmetric baseline is the natural fallback candidate
+                candidates.append(heuristic_plan(self.graph, cluster,
+                                                 self.cost))
+            except ValueError:
+                pass
         self.engine = RuntimeEngine(self.graph, self.plan, self.executors,
-                                    self.models, cost_model=self.cost)
+                                    self.models, cost_model=self.cost,
+                                    recalibrate_every=exp.recalibrate_every,
+                                    plan_candidates=candidates)
         self.iteration = 0
         self.ckpt = None
         if exp.checkpoint_every > 0:
@@ -199,6 +226,16 @@ class RLHFExperiment:
         if self.ckpt and self.iteration % self.exp.checkpoint_every == 0:
             self.save_checkpoint()
         return out
+
+    # ---------------------------------------------------------- calibration
+    def save_profile(self) -> None:
+        """Persist the (possibly runtime-refitted) calibrated cost model back
+        into the profile store — the write half of the closed loop.  No-op
+        unless ``profile_path`` was configured."""
+        if self.profile_store is None:
+            return
+        self.profile_store.put_cost_model(self.actor_cfg.name, self.cost)
+        self.profile_store.save()
 
     # -------------------------------------------------------- checkpointing
     def _checkpoint_trees(self) -> dict:

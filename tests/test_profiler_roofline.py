@@ -1,15 +1,30 @@
-"""Profiler calibration, HLO collective parser, serve bucketing."""
+"""Profiler calibration + persistent profile store, HLO collective parser,
+serve bucketing."""
+
+import json
+import time
 
 import jax
 import numpy as np
+import pytest
 
 from repro import hw
 from repro.configs import ARCHS
-from repro.core.plan import Cluster
-from repro.core.profiler import ProfileTable, calibrate, profile_model
+from repro.core.dfg import FunctionCall, GENERATE, INFERENCE, TRAIN, Workload
+from repro.core.estimator import CostModel, Profile, assignment_key
+from repro.core.plan import (Assignment, Cluster, DeviceMesh,
+                             ParallelStrategy)
+from repro.core.profiler import (SCHEMA_VERSION, SINGLE_DEV_KEY,
+                                 ProfileEntry, ProfileStore, ProfileTable,
+                                 calibrate, fit_type_scales,
+                                 fold_rollout_summary, fold_serve_summary,
+                                 profile_and_store, profile_model)
 from repro.launch.roofline import (CollectiveStats, RooflineTerms,
                                    parse_collectives, model_flops)
 from repro.launch.serve import BatchServer, bucket_of
+
+CPU = hw.HOST_CPU
+ASG1 = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
 
 
 def test_profiler_measures_and_calibrates():
@@ -22,10 +37,264 @@ def test_profiler_measures_and_calibrates():
     lo = table.entries[("train", 2, 16)]
     hi = table.entries[("train", 2, 32)]
     assert min(lo, hi) * 0.5 <= mid <= max(lo, hi) * 1.5
-    cpu = hw.ChipSpec(name="cpu", peak_flops_bf16=5e10, hbm_bytes=8e9,
-                      hbm_bw=2e10, ici_link_bw=1e9)
-    prof = calibrate(cfg, table, Cluster(1, 1, chip=cpu))
+    prof = calibrate(cfg, table, Cluster(1, 1, chip=CPU))
     assert prof.compute_scale > 0
+    # every grid point is also recorded under the single-device assignment
+    # key for the calibrated CostModel's exact-hit path
+    assert table.lookup_exact("train", 2, 16, SINGLE_DEV_KEY) == lo
+
+
+def test_lookup_extrapolates_beyond_grid():
+    """Below the grid the fixed overhead survives (slope continuation, not a
+    through-origin ray); above the grid the last segment's slope continues."""
+    t = ProfileTable("m", {})
+    t.add("train", 2, 16, 1.0)  # 32 tokens
+    t.add("train", 2, 32, 1.5)  # 64 tokens
+    assert t.lookup("train", 2, 24) == pytest.approx(1.25)  # interpolation
+    # below: 1.0 - (0.5/32)*16 = 0.75, NOT the proportional 0.5
+    assert t.lookup("train", 1, 16) == pytest.approx(0.75)
+    # above: 1.5 + (0.5/32)*64 = 2.5, NOT the proportional 3.0
+    assert t.lookup("train", 2, 64) == pytest.approx(2.5)
+    assert t.lookup("train", 1, 1) > 0  # clamped positive far below
+    # monotone above the grid even for a (noisy) downward last segment
+    noisy = ProfileTable("m", {})
+    noisy.add("train", 2, 16, 1.0)
+    noisy.add("train", 2, 32, 0.9)
+    assert noisy.lookup("train", 2, 128) == pytest.approx(0.9)
+    # a single point has no slope information: proportional fallback
+    single = ProfileTable("m", {})
+    single.add("train", 2, 16, 1.0)
+    assert single.lookup("train", 4, 16) == pytest.approx(2.0)
+    assert single.lookup("train", 1, 16) == pytest.approx(0.5)
+    assert ProfileTable("m", {}).lookup("train", 2, 16) is None
+
+
+def test_lookup_collapses_equal_token_counts():
+    """Distinct (batch, seq) points sharing a token count (8x96 == 24x32)
+    must not produce a zero-width segment (was a ZeroDivisionError)."""
+    t = ProfileTable("m", {})
+    t.add("generate", 8, 96, 0.4)   # 768 tokens
+    t.add("generate", 24, 32, 0.6)  # 768 tokens too -> collapse to mean 0.5
+    assert t.lookup("generate", 2, 16) == pytest.approx(
+        0.5 * 32 / 768)  # one collapsed point: proportional fallback
+    t.add("generate", 2, 192, 0.2)  # 384 tokens: now one real segment
+    assert t.lookup("generate", 2, 288) == pytest.approx(0.35)  # interp @576
+    assert t.lookup("generate", 2, 96) == pytest.approx(0.05)   # below @192
+    assert t.lookup("generate", 24, 64) == pytest.approx(1.1)   # above @1536
+
+
+def test_exact_hits_do_not_mix_models():
+    """Two models with identical workloads and assignments (PPO's
+    reward_inf vs ref_inf) must keep separate exact-hit measurements."""
+    small = ARCHS["qwen2-0.5b"].reduced()
+    other = ARCHS["gemma3-1b"].reduced()
+    assert small.name != other.name
+    cluster = Cluster(1, 1, chip=CPU)
+    cost = CostModel(cluster, table=ProfileTable(small.name, {}))
+    call_a = FunctionCall("a", "ma", INFERENCE, small, Workload(2, 16, 0))
+    call_b = FunctionCall("b", "mb", INFERENCE, other, Workload(2, 16, 0))
+    cost.record_measurement(call_a, ASG1, 0.010)
+    cost.record_measurement(call_b, ASG1, 0.999)
+    assert cost.call_time(call_a, ASG1) == pytest.approx(0.010)
+    assert cost.call_time(call_b, ASG1) == pytest.approx(0.999)
+    # the foreign model stayed out of the table's interpolation grid
+    assert cost.table.entries[(INFERENCE, 2, 16)] == pytest.approx(0.010)
+
+
+def test_table_running_means_and_merge():
+    a = ProfileTable("m", {})
+    a.add("train", 2, 16, 1.0, asg_key="k")
+    a.add("train", 2, 16, 3.0, asg_key="k")
+    assert a.entries[("train", 2, 16)] == pytest.approx(2.0)
+    assert a.counts[("train", 2, 16)] == 2
+    assert a.lookup_exact("train", 2, 16, "k") == pytest.approx(2.0)
+    b = ProfileTable("m", {})
+    b.add("train", 2, 16, 5.0, asg_key="k")
+    b.add("inference", 2, 16, 0.5)
+    a.merge(b)  # count-weighted: (1.0 + 3.0 + 5.0) / 3
+    assert a.entries[("train", 2, 16)] == pytest.approx(3.0)
+    assert a.counts[("train", 2, 16)] == 3
+    assert a.entries[("inference", 2, 16)] == pytest.approx(0.5)
+    assert a.lookup_exact("train", 2, 16, "k") == pytest.approx(3.0)
+
+
+def _toy_entry(fingerprint="fp", created_at=None):
+    t = ProfileTable("toy", {})
+    t.add("train", 2, 16, 1.0, asg_key=SINGLE_DEV_KEY)
+    t.add("inference", 2, 16, 0.25, asg_key=SINGLE_DEV_KEY)
+    return ProfileEntry("toy", fingerprint,
+                        time.time() if created_at is None else created_at,
+                        t, Profile(compute_scale=3.0), {"train": 1.5})
+
+
+def test_profile_store_roundtrip_staleness_and_fingerprint(tmp_path):
+    path = str(tmp_path / "store.json")
+    store = ProfileStore(path)
+    store.put(_toy_entry())
+    store.save()
+    again = ProfileStore(path)
+    e = again.get("toy", "fp")
+    assert e is not None
+    assert e.profile.compute_scale == 3.0
+    assert e.type_scales == {"train": 1.5}
+    assert e.table.lookup_exact("train", 2, 16, SINGLE_DEV_KEY) == 1.0
+    # wrong fingerprint / unknown model / stale entry all miss
+    assert again.get("toy", "other-machine") is None
+    assert again.get("unknown", "fp") is None
+    assert again.get("toy", "fp", max_age_s=1e9) is not None
+    assert again.get("toy", "fp", max_age_s=0.0) is None
+
+
+def test_profile_store_rejects_foreign_schema(tmp_path):
+    path = tmp_path / "store.json"
+    path.write_text(json.dumps({"schema_version": SCHEMA_VERSION + 1,
+                                "entries": [{"bogus": True}]}))
+    assert ProfileStore(str(path)).entries == {}
+    path.write_text("not json at all")
+    assert ProfileStore(str(path)).entries == {}
+
+
+def test_profile_store_merge_on_put(tmp_path):
+    store = ProfileStore(str(tmp_path / "s.json"))
+    store.put(_toy_entry())
+    e2 = _toy_entry()
+    e2.table.add("train", 2, 16, 3.0, asg_key=SINGLE_DEV_KEY)  # mean -> 2.0
+    merged = store.put(e2)
+    # (1.0) from old + (1.0, 3.0) from new, count-weighted
+    assert merged.table.entries[("train", 2, 16)] == pytest.approx(5 / 3)
+    assert merged.table.counts[("train", 2, 16)] == 3
+
+
+def _call(kind, cfg, b=2, s=16):
+    return FunctionCall("c", "m", kind, cfg, Workload(b, s, 0))
+
+
+def test_cost_model_exact_hit_then_scaled_analytic():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    table = ProfileTable(cfg.name, {})
+    table.add(TRAIN, 2, 16, 0.123, asg_key=assignment_key(ASG1))
+    cost = CostModel(cluster, table=table, type_scales={TRAIN: 2.0})
+    analytic = CostModel(cluster)
+    # exact measured hit wins outright
+    assert cost.call_time(_call(TRAIN, cfg), ASG1) == 0.123
+    # unmeasured workload: analytic x per-type scale
+    t = cost.call_time(_call(TRAIN, cfg, 4, 32), ASG1)
+    assert t == pytest.approx(
+        2.0 * analytic.call_time(_call(TRAIN, cfg, 4, 32), ASG1))
+    # unknown call type scale defaults to 1.0
+    assert cost.call_time(_call(INFERENCE, cfg), ASG1) == pytest.approx(
+        analytic.call_time(_call(INFERENCE, cfg), ASG1))
+    # analytic_call_time ignores the exact hit
+    assert cost.analytic_call_time(_call(TRAIN, cfg), ASG1) != 0.123
+
+
+def test_record_measurement_and_refit():
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    cost = CostModel(cluster, table=ProfileTable(cfg.name, {}))
+    base = cost.call_cost(_call(TRAIN, cfg), ASG1).total
+    for factor in (3.0, 5.0, 4.0):
+        cost.record_measurement(_call(TRAIN, cfg), ASG1, base * factor)
+    assert cost.n_measurements() == 3
+    scales = cost.refit()
+    assert scales[TRAIN] == pytest.approx(4.0)  # median ratio
+    # measurements also landed in the table as exact hits
+    assert cost.table.lookup_exact(
+        TRAIN, 2, 16, assignment_key(ASG1)) == pytest.approx(base * 4.0)
+    # toy calls without a config are ignored, not crashed on
+    cost.record_measurement(
+        FunctionCall("t", "m", TRAIN, None, Workload(1, 1, 0)), ASG1, 1.0)
+    assert cost.n_measurements() == 3
+
+
+def test_fit_type_scales_residual_over_profile():
+    """Scales fitted under a Profile are residual corrections: applying them
+    on top of that same Profile must land on the measured value."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    table = ProfileTable(cfg.name, {})
+    base = CostModel(cluster)
+    for b, s in ((2, 16), (2, 32), (4, 32)):
+        table.add(TRAIN, b, s,
+                  4.0 * base.call_cost(_call(TRAIN, cfg, b, s), ASG1).total)
+    prof = calibrate(cfg, table, cluster)
+    scales = fit_type_scales(cfg, table, cluster, prof)
+    cal = CostModel(cluster, profile=prof, type_scales=scales)
+    got = cal.call_time(_call(TRAIN, cfg, 2, 32), ASG1)
+    want = table.entries[(TRAIN, 2, 32)]
+    assert got == pytest.approx(want, rel=0.2)
+
+
+def test_calibrated_search_picks_up_persisted_profile(tmp_path):
+    """The acceptance loop: persist a profile, reload from disk, and search()
+    runs on the calibrated model with identical estimates."""
+    from repro.core.dfg import build_ppo
+    from repro.core.search import search
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    table = ProfileTable(cfg.name, {})
+    base = CostModel(cluster)
+    for kind in (TRAIN, INFERENCE, GENERATE):
+        for b, s in ((2, 16), (2, 32), (4, 32)):
+            w = (Workload(b, s, 0) if kind != GENERATE
+                 else Workload(b, s // 2, s - s // 2))
+            call = FunctionCall("c", "m", kind, cfg, w)
+            table.add(kind, b, s, 3.0 * base.call_cost(call, ASG1).total,
+                      asg_key=assignment_key(ASG1))
+    prof = calibrate(cfg, table, cluster)
+    scales = fit_type_scales(cfg, table, cluster, prof)
+    entry = ProfileEntry(cfg.name, hw.fingerprint(), time.time(), table,
+                         prof, scales)
+    path = str(tmp_path / "profiles.json")
+    store = ProfileStore(path)
+    store.put(entry)
+    store.save()
+
+    dfg = build_ppo(cfg, cfg, batch=2, prompt_len=8, gen_len=8,
+                    n_minibatches=1)
+    reloaded = ProfileStore(path)
+    res = search(dfg, cluster, profile_store=reloaded, model_cfg=cfg,
+                 iters=20, seed=0)
+    assert res.best_plan is not None
+    assert res.accepted_log, "accepted_log must record the final plan"
+    assert all("est_time_s" in r for r in res.accepted_log)
+    # save -> reload -> identical estimates on every call of the graph
+    direct = entry.cost_model(cluster)
+    fromdisk = reloaded.get(cfg.name).cost_model(cluster)
+    for call in dfg.calls:
+        asg = res.best_plan.assignments[call.name]
+        assert direct.call_time(call, asg) == fromdisk.call_time(call, asg)
+
+
+def test_profile_and_store_load_or_profile(tmp_path):
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    path = str(tmp_path / "p.json")
+    store = ProfileStore(path)
+    e1 = profile_and_store(cfg, store, cluster, batches=(2,), seqs=(16,))
+    assert e1.table.entries  # measured and persisted
+    # second call must hit the store, not re-measure (same object state)
+    e2 = profile_and_store(cfg, store, cluster, batches=(2,), seqs=(16,))
+    assert e2.created_at == e1.created_at
+    # a fresh store on the same path sees it too
+    assert ProfileStore(path).get(cfg.name) is not None
+
+
+def test_fold_bench_summaries_into_table():
+    table = ProfileTable("qwen2-0.5b-smoke", {})
+    fold_rollout_summary(table, {
+        "model": "qwen2-0.5b-smoke", "batch": 8, "prompt_len": 32,
+        "gen_len": 64, "tok_s": {"seed": 1000.0, "fused": 2000.0}})
+    # seconds = batch * gen_len / fused tok_s
+    assert table.lookup_exact(GENERATE, 8, 96) == pytest.approx(
+        8 * 64 / 2000.0)
+    fold_serve_summary(table, {
+        "workload": {"requests": 24, "useful_tokens": 300, "max_new": 64,
+                     "mean_new": 10.0, "mean_prompt": 14.0},
+        "continuous": {"tok_s": 500.0, "wall_s": 0.6}})
+    assert table.lookup_exact(GENERATE, 24, 24) == pytest.approx(0.6)
 
 
 HLO = """

@@ -1,18 +1,26 @@
-"""Runtime engine + end-to-end tiny RLHF + fault tolerance behaviours."""
+"""Runtime engine + end-to-end tiny RLHF + fault tolerance + closed-loop
+recalibration behaviours."""
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import hw
 from repro.configs import ARCHS
-from repro.core.plan import Assignment, Cluster, DeviceMesh, ParallelStrategy
+from repro.core.estimator import CostModel, assignment_key
+from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
+                             ParallelStrategy)
+from repro.core.profiler import ProfileStore, ProfileTable
 from repro.core.runtime import ModelState, RuntimeEngine
 from repro.core.dfg import DataflowGraph, FunctionCall, Workload, INFERENCE
 from repro.rlhf.experiment import ExperimentConfig, RLHFExperiment
 from repro.rlhf.ppo import PPOHyperparameters
 
 CLUSTER = Cluster(n_nodes=1, devs_per_node=1)
+CPU = hw.HOST_CPU
 
 
 @pytest.fixture(scope="module")
@@ -112,6 +120,115 @@ def test_checkpoint_every_wires_through_manager(tmp_path):
     for a, b in zip(jax.tree.leaves(saved),
                     jax.tree.leaves(e.models["actor"].params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------- closed-loop calibration
+
+def _one_call_setup(sleep_s=0.02, table=None, candidates=None,
+                    recalibrate_every=1):
+    """One inference call on a 1x2 cluster with a sleeping executor: the
+    smallest graph whose measured time the engine can learn from."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(n_nodes=1, devs_per_node=2, chip=CPU)
+    call = FunctionCall("work", "m", INFERENCE, cfg, Workload(2, 16, 0),
+                        inputs=(), outputs=("x",))
+    dfg = DataflowGraph([call], "toy")
+    asg_a = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 1))
+    plan = ExecutionPlan({"work": asg_a}, cluster)
+    cost = CostModel(cluster,
+                     table=table if table is not None
+                     else ProfileTable(cfg.name, {}))
+    eng = RuntimeEngine(
+        dfg, plan, {"work": lambda ms, inp: time.sleep(sleep_s) or {"x": 1}},
+        {"m": ModelState({})}, cost_model=cost,
+        recalibrate_every=recalibrate_every, plan_candidates=candidates)
+    return eng, cost, asg_a, cluster
+
+
+def test_recalibrate_refits_from_live_records():
+    """recalibrate_every folds CallRecords into the cost model at iteration
+    boundaries without disturbing the existing stats() surface."""
+    eng, cost, asg_a, _ = _one_call_setup(sleep_s=0.02)
+    eng.run_iteration({})
+    assert eng.recalibrations == 1
+    assert cost.n_measurements() == 1
+    # the measured time became an exact-hit entry and a refitted scale
+    hit = cost.table.lookup_exact(INFERENCE, 2, 16, assignment_key(asg_a))
+    assert hit == pytest.approx(0.02, abs=0.05)
+    assert INFERENCE in cost.type_scales
+    # estimator now predicts the measured time for this assignment
+    call = eng.dfg.calls[0]
+    assert cost.call_time(call, asg_a) == hit
+    st = eng.stats()
+    for key in ("wall_s", "realloc_s", "stragglers", "retries",
+                "prefetch_hits", "calls"):  # pre-existing consumers
+        assert key in st
+    assert st["recalibrations"] == 1 and st["replans"] == 0
+    # second iteration folds only the new record
+    eng.run_iteration({})
+    assert eng.recalibrations == 2
+    assert cost.n_measurements() == 2
+    # retried records span the failed attempt too — excluded from the fold
+    from repro.core.runtime import CallRecord
+    eng.records.append(CallRecord("work", 0.0, 99.0, 0.0, retried=True))
+    eng.recalibrate()
+    assert cost.n_measurements() == 2
+
+
+def test_recalibration_replans_only_on_measured_ranking_flip():
+    """The engine switches plans when calibrated estimates flip the ranking,
+    and holds the current plan when they confirm it — even though the pure
+    analytic model prefers the candidate in both cases."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    asg_b = Assignment(DeviceMesh(0, 1, 0, 2), ParallelStrategy(2, 1, 1, 1))
+
+    def run_case(candidate_measured_s):
+        table = ProfileTable(cfg.name, {})
+        # persisted profile: the 2-device assignment was measured before
+        table.add(INFERENCE, 2, 16, candidate_measured_s,
+                  asg_key=assignment_key(asg_b))
+        eng, cost, asg_a, cluster = _one_call_setup(sleep_s=0.02, table=table)
+        plan_b = ExecutionPlan({"work": asg_b}, cluster)
+        eng.plan_candidates = [plan_b]
+        # sanity: the uncalibrated analytic model always prefers B (2 devs)
+        ana = CostModel(cluster)
+        call = eng.dfg.calls[0]
+        assert ana.call_time(call, asg_b) < ana.call_time(call, asg_a)
+        eng.run_iteration({})
+        return eng, asg_a
+
+    # candidate measured much faster than the live plan: ranking flips
+    eng, _ = run_case(candidate_measured_s=0.001)
+    assert eng.stats()["replans"] == 1
+    assert eng.plan.assignments["work"].mesh.dev_count == 2
+    # candidate measured much slower: calibration overrides the analytic
+    # preference and the engine keeps its plan
+    eng, asg_a = run_case(candidate_measured_s=10.0)
+    assert eng.stats()["replans"] == 0
+    assert eng.plan.assignments["work"] == asg_a
+
+
+def test_experiment_calibration_plumbing(tmp_path):
+    """profile_path + recalibrate_every wire through ExperimentConfig: live
+    records refit the cost model, save_profile() persists them, and a fresh
+    experiment starts calibrated from the store."""
+    actor = ARCHS["qwen2-0.5b"].reduced()
+    path = str(tmp_path / "profiles.json")
+    cfg = ExperimentConfig(batch=2, prompt_len=8, gen_len=4, search_iters=0,
+                           ppo=PPOHyperparameters(n_minibatches=1),
+                           profile_path=path, recalibrate_every=6)
+    e = RLHFExperiment(actor, actor, CLUSTER, cfg, search=False)
+    assert e.profile_store is not None
+    assert e.cost.table is not None  # empty table attached for recording
+    e.run_iteration(jax.random.PRNGKey(0))
+    assert e.engine.stats()["recalibrations"] == 1
+    assert e.cost.type_scales and e.cost.table.entries
+    e.save_profile()
+    assert ProfileStore(path).get(actor.name) is not None
+    # a fresh experiment on the same store starts calibrated
+    e2 = RLHFExperiment(actor, actor, CLUSTER, cfg, search=False)
+    assert e2.cost.type_scales
+    assert e2.cost.table.entries == e.cost.table.entries
 
 
 def test_reallocation_invoked_between_calls():
