@@ -18,13 +18,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,table6,fig12,fig13,fig14,"
-                         "fig15,fig16,fig17,kernels,roofline,rollout,serve")
+                         "fig15,fig16,fig17,kernels,roofline,rollout,serve,"
+                         "moe")
     ap.add_argument("--fast", action="store_true",
                     help="fewer MCMC iterations (CI-friendly)")
     args = ap.parse_args()
 
-    from benchmarks import (estimator_acc, kernels_bench, paper_figs,
-                            roofline_table, rollout_bench, serve_bench)
+    from benchmarks import (estimator_acc, kernels_bench, moe_bench,
+                            paper_figs, roofline_table, rollout_bench,
+                            serve_bench)
     it = 150 if args.fast else 600
 
     benches = {
@@ -41,6 +43,7 @@ def main() -> None:
         "roofline": roofline_table.run,
         "rollout": rollout_bench.run,
         "serve": serve_bench.run,
+        "moe": moe_bench.run,
     }
     only = args.only.split(",") if args.only else list(benches)
 

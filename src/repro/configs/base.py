@@ -52,6 +52,10 @@ class ModelConfig:
     top_k: int = 0
     expert_d_ff: int = 0
     dense_residual_ffn: bool = False  # Arctic: dense MLP in parallel with MoE
+    # MoE dispatch mode: "dropless" (cohort-independent grouped dispatch —
+    # decode bit-matches the training forward) or "capacity" (legacy (E, C, D)
+    # capacity-drop buffers, kept for training-parity experiments).
+    moe_dispatch: str = "dropless"
 
     # Attention details
     qkv_bias: bool = False
@@ -88,6 +92,7 @@ class ModelConfig:
             f"{self.name}: pattern covers {n} layers != num_layers={self.num_layers}")
         if self.family != "encdec":
             assert self.enc_layers == 0
+        assert self.moe_dispatch in ("dropless", "capacity"), self.moe_dispatch
 
     # ------------------------------------------------------------ properties
     @property

@@ -72,6 +72,28 @@ def paged_decode_mha(q, k_pool, v_pool, block_table, *, cache_len,
         interpret=(impl == "pallas_interpret"))
 
 
+def grouped_ffn(xs, group_sizes, w_gate, w_in, w_out, *, act="silu",
+                impl="reference"):
+    """Grouped gated expert FFN over expert-sorted rows (dropless MoE).
+
+    xs: (N, D) rows sorted by expert; group_sizes: (E,) int32 rows per
+    expert, summing to N (the ragged group offsets are its cumsum);
+    w_gate/w_in: (E, D, F); w_out: (E, F, D).  Returns (N, D) float32 — all tiers
+    accumulate in fp32 and the combine caller casts once at the end.  Row
+    i's result depends only on row i and its expert's weights, so the same
+    token produces the same value (to fp reduction-order tolerance) in any
+    cohort (training forward, prefill, decode) — the property the dropless
+    dispatch exists for."""
+    _check(impl)
+    if impl in ("reference", "stub"):
+        return ref.grouped_ffn_ref(xs, group_sizes, w_gate, w_in, w_out,
+                                   act=act)
+    from repro.kernels import grouped_expert
+    return grouped_expert.grouped_ffn(
+        xs, group_sizes, w_gate, w_in, w_out, act=act,
+        interpret=(impl == "pallas_interpret"))
+
+
 NEG_INF = -2.0**30
 
 

@@ -125,6 +125,142 @@ def paged_decode_mha_ref(q, k_pool, v_pool, block_table, *, cache_len):
 
 
 # ---------------------------------------------------------------------------
+# Grouped (dropless MoE) expert FFN
+# ---------------------------------------------------------------------------
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def expert_ids_of(group_sizes, n: int):
+    """Per-row expert id from ragged group offsets: row i of the
+    expert-sorted layout belongs to the first expert whose (inclusive)
+    cumsum offset exceeds i.  group_sizes: (E,) int32; ids for rows beyond
+    the total are clamped to the last expert (indexing safety only —
+    ``grouped_ffn_ref`` zeroes those rows' outputs)."""
+    ends = jnp.cumsum(group_sizes)
+    eid = jnp.searchsorted(ends, jnp.arange(n), side="right")
+    return jnp.minimum(eid, group_sizes.shape[0] - 1).astype(jnp.int32)
+
+
+def row_tiles(n: int, block_rows: int) -> tuple[int, int]:
+    """(bn, n_pad): the 8-aligned row-tile size (<= block_rows) and padded
+    row count.  One definition shared by the oracle's scan regime and the
+    Pallas kernel so both walk the identical unit schedule."""
+    bn = min(block_rows, max(8, -(-n // 8) * 8))
+    return bn, -(-n // bn) * bn
+
+
+def group_metadata(group_sizes, n_pad: int, bn: int):
+    """Per-work-unit dispatch metadata for the grouped expert GEMM (shared
+    by the jnp oracle below and the Pallas kernel's scalar prefetch; all
+    shapes static).
+
+    Rows are tiled into ``bn``-row m-tiles; a tile straddling a group
+    boundary is processed once per group it intersects, so the worst case
+    is ``tiles_m + E - 1`` units.  Returns (unit_group, unit_tile, unit_lo,
+    unit_hi, unit_first), each (tiles_m + E - 1,) int32.  Units beyond the
+    real total (fewer straddles than worst case, empty experts) alias the
+    last m-tile and the last nonempty expert with an empty [0, 0) row
+    range, so consumers skip their compute entirely — and, in the Pallas
+    kernel, their unchanged block indices issue no DMAs.
+    """
+    e = group_sizes.shape[0]
+    tiles_m = n_pad // bn
+    units = tiles_m + e - 1
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    starts = ends - sizes
+    t_start = starts // bn
+    t_end = jnp.where(sizes > 0, (ends + bn - 1) // bn, t_start)
+    tiles_pg = (t_end - t_start).astype(jnp.int32)  # 0 for empty experts
+    cum = jnp.cumsum(tiles_pg)
+    total = cum[-1]
+    gids = jnp.arange(units, dtype=jnp.int32)
+    ug = jnp.searchsorted(cum, gids, side="right").astype(jnp.int32)
+    valid = gids < total
+    ug = jnp.minimum(ug, e - 1)
+    unit_base = cum[ug] - tiles_pg[ug]
+    ut = jnp.where(valid, t_start[ug] + (gids - unit_base), tiles_m - 1)
+    lo = jnp.where(valid, starts[ug], 0).astype(jnp.int32)
+    hi = jnp.where(valid, ends[ug], 0).astype(jnp.int32)
+    # padding units alias the last *nonempty* expert (and the last m-tile):
+    # consecutive equal block indices mean the Pallas pipeline re-fetches
+    # nothing for them, and their empty [0, 0) row range skips the compute
+    last_ne = jnp.max(jnp.where(sizes > 0, jnp.arange(e, dtype=jnp.int32), -1))
+    ug = jnp.where(valid, ug, jnp.maximum(last_ne, 0))
+    prev = jnp.concatenate([jnp.full((1,), -1, ut.dtype), ut[:-1]])
+    first = (ut != prev).astype(jnp.int32)
+    return ug, ut.astype(jnp.int32), lo, hi, first
+
+
+def grouped_ffn_ref(xs, group_sizes, w_gate, w_in, w_out, *, act="silu",
+                    block_rows: int = 64, gather_limit: int = 1 << 22):
+    """Grouped gated expert FFN over expert-sorted rows (dropless MoE).
+
+    xs: (N, D) rows already sorted by expert; group_sizes: (E,) int32 rows
+    per expert (ragged group offsets = its cumsum; must sum to N — the
+    reference regimes zero any tail rows beyond the total, the Pallas tier
+    leaves them undefined); w_gate/w_in: (E, D, F); w_out: (E, F, D).  Row
+    i runs through expert ``expert_ids_of(...)[i]`` only — no capacity
+    padding, no drops, and each row's result depends on nothing but that
+    row and its expert's weights (cohort independence).  Computes in fp32
+    and returns (N, D) float32; callers cast once.
+
+    Two regimes (same per-row math, chosen by static shape):
+      * small N x D x F (decode steps, CPU tests): per-row weight gather —
+        exactly N rows of work, nothing expert-count-shaped.
+      * large (training cohorts, dry-run lowering): a scan over the same
+        boundary-spanning work units as the Pallas kernel, so the working
+        set stays one (D, F) expert slab + one (bn, D) row tile per step
+        (the gather would materialize N x D x F) and empty units are
+        skipped via ``lax.cond``.
+    """
+    n, d = xs.shape
+    f32 = jnp.float32
+    act_fn = ACTS[act]
+
+    if n * d * w_gate.shape[-1] <= gather_limit:
+        eid = expert_ids_of(group_sizes, n)
+        x32 = xs.astype(f32)
+        g = act_fn(jnp.einsum("nd,ndf->nf", x32, w_gate[eid].astype(f32)))
+        h = g * jnp.einsum("nd,ndf->nf", x32, w_in[eid].astype(f32))
+        y = jnp.einsum("nf,nfd->nd", h, w_out[eid].astype(f32))
+        in_group = jnp.arange(n) < jnp.sum(group_sizes)
+        return jnp.where(in_group[:, None], y, 0.0)
+
+    bn, n_pad = row_tiles(n, block_rows)
+    xt = jnp.pad(xs.astype(f32),
+                 ((0, n_pad - n), (0, 0))).reshape(n_pad // bn, bn, d)
+    ug, ut, lo, hi, _ = group_metadata(group_sizes, n_pad, bn)
+
+    def compute(inp):
+        ugi, uti, loi, hii = inp
+        x = jax.lax.dynamic_index_in_dim(xt, uti, 0, keepdims=False)
+        wg = jax.lax.dynamic_index_in_dim(w_gate, ugi, 0,
+                                          keepdims=False).astype(f32)
+        wi = jax.lax.dynamic_index_in_dim(w_in, ugi, 0,
+                                          keepdims=False).astype(f32)
+        wo = jax.lax.dynamic_index_in_dim(w_out, ugi, 0,
+                                          keepdims=False).astype(f32)
+        g = act_fn(x @ wg)
+        h = g * (x @ wi)
+        y = h @ wo  # (bn, d)
+        rows = uti * bn + jnp.arange(bn)
+        return jnp.where(((rows >= loi) & (rows < hii))[:, None], y, 0.0)
+
+    def unit(out, inp):
+        _, uti, loi, hii = inp
+        y = jax.lax.cond(loi < hii, compute,
+                         lambda _: jnp.zeros((bn, d), f32), inp)
+        tile = jax.lax.dynamic_index_in_dim(out, uti, 0, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(out, tile + y, uti, 0), None
+
+    out0 = jnp.zeros((n_pad // bn, bn, d), f32)
+    out, _ = jax.lax.scan(unit, out0, (ug, ut, lo, hi))
+    return out.reshape(n_pad, d)[:n]
+
+
+# ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality), chunked
 # ---------------------------------------------------------------------------
 

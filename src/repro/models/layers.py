@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ref import ACTS
 
 
 def truncated_normal(key, shape, dtype, scale):
@@ -64,7 +65,7 @@ def rope_apply(x, positions, theta: float):
 # ----------------------------------------------------------------- MLP
 
 def act_fn(name: str):
-    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+    return ACTS[name]  # single registry shared with the kernel tiers
 
 
 def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):

@@ -114,8 +114,8 @@ def prefill(params, cfg: ModelConfig, batch, max_len, *, impl="reference"):
         enc_len = enc_out.shape[1]
     caches = T.cache_init(cfg, x.shape[0], max_len, jnp.dtype(cfg.dtype),
                           cross=cross, enc_len=enc_len)
-    h, _, caches = T.stack_prefill(params["groups"], cfg, x, pos, caches,
-                                   impl=impl, enc_out=enc_out)
+    h, caches = T.stack_prefill(params["groups"], cfg, x, pos, caches,
+                                impl=impl, enc_out=enc_out)
     h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
     return h[:, -1], caches
 

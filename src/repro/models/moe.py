@@ -1,10 +1,25 @@
-"""Top-k MoE FFN with capacity-based sort dispatch (expert-parallel friendly).
+"""Top-k MoE FFN with cohort-independent dropless dispatch (EP friendly).
 
-Dispatch is the classic sort-by-expert + capacity-drop scheme: tokens are
-argsorted by their assigned expert, scattered into an (E, C, D) buffer that is
-sharded over the expert axis (EP), run through a batched expert einsum, and
-combined back with the (renormalized) router weights.  Dropped tokens fall
-back to the residual path (plus Arctic's dense-residual MLP when configured).
+``cfg.moe_dispatch`` selects the dispatch scheme:
+
+* ``"dropless"`` (default) — sort-by-expert with ragged per-expert group
+  offsets feeding a grouped expert GEMM (``ops.grouped_ffn``) over the *real*
+  token count.  No capacity buffer, no drops: every row runs through exactly
+  its own top-k experts with weights renormalized over that row's own router
+  output, so a token routes identically — and its FFN result agrees to fp
+  tolerance (only reduction-grouping ulps differ between cohort shapes) —
+  whether it is computed in the training forward, a prefill, or a
+  single-token decode step (the rollout / trainer logprob consistency PPO
+  assumes).  It is also a decode *speed* win:
+  the capacity path pads a t-token step to ``E × max(8, capacity)`` rows.
+* ``"capacity"`` — the classic (E, C, D) capacity-drop scheme, kept for
+  training-parity experiments.  Capacity scales with the cohort's token
+  count and drop rank spans the flat batch-major cohort, so routing is
+  cohort-*dependent*.  Dropped tokens fall back to the residual path, with
+  combine weights renormalized over the experts actually kept.
+
+Both paths accumulate the combine in fp32 and cast to the model dtype once
+at the end.  Arctic's dense-residual MLP rides alongside either scheme.
 """
 
 from __future__ import annotations
@@ -13,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 
 CAPACITY_FACTOR = 1.25
@@ -39,51 +55,108 @@ def capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(8, min(n_tokens, c))
 
 
-def moe_apply(p, cfg: ModelConfig, x):
-    """x: (B, S, D) -> (B, S, D) plus aux load-balancing loss."""
-    b, s, d = x.shape
-    t = b * s
-    e, k = cfg.n_experts, cfg.top_k
-    c = capacity(t, cfg)
-    xf = x.reshape(t, d)
-
+def _router(p, cfg: ModelConfig, xf):
+    """(T, D) -> (probs (T, E) f32, top_w (T, K) f32, top_i (T, K) i32)."""
     logits = L.dense_apply(p["router"], xf.astype(jnp.float32))  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    top_w, top_i = jax.lax.top_k(probs, k)  # (T, K)
-    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    return probs, top_w, top_i
 
-    # Aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+
+def _aux_loss(probs, top_i, e: int):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    tk = top_i.size
     me = probs.mean(axis=0)
     ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
-        jnp.ones((t * k,), jnp.float32)) / (t * k)
-    aux_loss = e * jnp.sum(me * ce)
+        jnp.ones((tk,), jnp.float32)) / tk
+    return e * jnp.sum(me * ce)
 
-    # --- sort-based dispatch -------------------------------------------------
+
+def _sort_by_expert(top_i, t: int, k: int):
+    """Flatten (T, K) assignments and stably sort by expert id.
+    Returns (order, se, st): sorted flat indices, expert ids, token ids."""
     flat_e = top_i.reshape(t * k)
     flat_t = jnp.repeat(jnp.arange(t), k)
-    flat_w = top_w.reshape(t * k)
     order = jnp.argsort(flat_e, stable=True)
-    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
-    # rank within expert group
-    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    return order, flat_e[order], flat_t[order]
+
+
+def _dispatch_dropless(p, cfg: ModelConfig, xf, top_w, top_i, impl):
+    """Grouped dropless dispatch: every assignment is honored, weights are
+    renormalized over the row's own k experts only (cohort independent)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    order, _, st = _sort_by_expert(top_i, t, k)
+    sw = top_w.reshape(t * k)[order].astype(jnp.float32)
+    group_sizes = jnp.zeros((e,), jnp.int32).at[top_i.reshape(-1)].add(1)
+    ys = ops.grouped_ffn(xf[st], group_sizes, p["w_gate"], p["w_in"],
+                         p["w_out"], act=cfg.act, impl=impl)  # (T*K, D) f32
+    out = jnp.zeros((t, d), jnp.float32).at[st].add(ys * sw[:, None])
+    return out.astype(xf.dtype)
+
+
+def capacity_route(cfg: ModelConfig, top_w, top_i, t: int):
+    """Capacity-drop routing decisions for a T-token cohort.
+
+    Returns (order, st, slot, keep, sw, c): sorted token ids, dispatch
+    slots (``e*c`` = overflow/dropped), the sorted keep mask, and the
+    combine weights renormalized over each row's *kept* experts (a row that
+    loses an expert to the capacity limit redistributes its weight over the
+    survivors instead of silently under-weighting them)."""
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+    order, se, st = _sort_by_expert(top_i, t, k)
+    counts = jnp.zeros((e,), jnp.int32).at[top_i.reshape(-1)].add(1)
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                               jnp.cumsum(counts)[:-1]])
     rank = jnp.arange(t * k) - starts[se]
     keep = rank < c
     slot = jnp.where(keep, se * c + rank, e * c)  # overflow slot dropped
+    keep_tk = jnp.zeros((t * k,), bool).at[order].set(keep).reshape(t, k)
+    w_kept = top_w * keep_tk
+    w = w_kept / jnp.maximum(w_kept.sum(-1, keepdims=True), 1e-9)
+    sw = w.reshape(t * k)[order].astype(jnp.float32)
+    return order, st, slot, keep, sw, c
 
-    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(xf[st])
+
+def _dispatch_capacity(p, cfg: ModelConfig, xf, top_w, top_i):
+    t, d = xf.shape
+    e = cfg.n_experts
+    _, st, slot, keep, sw, c = capacity_route(cfg, top_w, top_i, t)
+
+    buf = jnp.zeros((e * c + 1, d), xf.dtype).at[slot].set(xf[st])
     xe = buf[:-1].reshape(e, c, d)
 
-    # --- expert compute (EP shards the leading E axis) ----------------------
+    # expert compute (EP shards the leading E axis)
     g = L.act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
     h = g * jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"]).reshape(e * c, d)
 
-    # --- combine -------------------------------------------------------------
-    contrib = ye[jnp.minimum(slot, e * c - 1)] * (
-        sw * keep.astype(jnp.float32))[:, None].astype(x.dtype)
-    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    contrib = ye[jnp.minimum(slot, e * c - 1)].astype(jnp.float32) * (
+        sw * keep.astype(jnp.float32))[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[st].add(contrib)
+    return out.astype(xf.dtype)
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, impl="reference", want_aux=True):
+    """x: (B, S, D) -> (B, S, D) plus aux load-balancing loss.
+
+    ``want_aux=False`` (serving paths: prefill/decode) skips the aux-loss
+    computation entirely — it is dead work outside the training forward —
+    and returns a constant 0.0 in its place."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    probs, top_w, top_i = _router(p, cfg, xf)
+    aux_loss = (_aux_loss(probs, top_i, cfg.n_experts) if want_aux
+                else jnp.zeros((), jnp.float32))
+
+    if cfg.moe_dispatch == "dropless":
+        out = _dispatch_dropless(p, cfg, xf, top_w, top_i, impl)
+    else:
+        out = _dispatch_capacity(p, cfg, xf, top_w, top_i)
     out = out.reshape(b, s, d)
 
     if "dense" in p:

@@ -57,12 +57,12 @@ def block_init(key, cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
     return p
 
 
-def _ffn(p, cfg, x):
+def _ffn(p, cfg, x, *, impl="reference", want_aux=True):
     if "ffn" not in p:
         return x, 0.0
     h = L.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
     if cfg.ffn_kind == "moe":
-        y, aux = M.moe_apply(p["ffn"], cfg, h)
+        y, aux = M.moe_apply(p["ffn"], cfg, h, impl=impl, want_aux=want_aux)
         return x + y, aux
     return x + L.mlp_apply(p["ffn"], cfg, h), 0.0
 
@@ -90,7 +90,7 @@ def block_apply(p, cfg, spec, x, positions, *, causal=True, impl="reference",
     if enc_out is not None:
         hx = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
         x = x + A.cross_attn_apply(p["xattn"], cfg, hx, enc_out, impl=impl)
-    x, aux = _ffn(p, cfg, x)
+    x, aux = _ffn(p, cfg, x, impl=impl)
     return x, aux, state
 
 
@@ -110,7 +110,7 @@ def block_decode(p, cfg, spec, x, cache, t, *, impl="reference", cross=False):
         hx = L.rmsnorm_apply(p["lnx"], x, cfg.norm_eps)
         x = x + A.cross_attn_apply(p["xattn"], cfg, hx, enc_kv=cache["xkv"],
                                    impl=impl)
-    x, _ = _ffn(p, cfg, x)
+    x, _ = _ffn(p, cfg, x, impl=impl, want_aux=False)
     new_cache = {"self": new_mixer, "xkv": cache["xkv"]} if cross else new_mixer
     return x, new_cache
 
@@ -136,7 +136,7 @@ def block_paged_decode(p, cfg, spec, x, cache, block_table, positions, *,
     else:
         y, new_cache = S.ssm_decode_apply(p["mixer"], cfg, h, cache)
     x = x + y
-    x, _ = _ffn(p, cfg, x)
+    x, _ = _ffn(p, cfg, x, impl=impl, want_aux=False)
     return x, new_cache
 
 
@@ -202,13 +202,12 @@ def cache_init(cfg: ModelConfig, batch, max_len, dtype, cross=False,
 
 def stack_prefill(groups_params, cfg: ModelConfig, x, positions, caches, *,
                   impl="reference", enc_out=None):
-    """Full forward that fills decode caches.  ``caches`` from cache_init."""
+    """Full forward that fills decode caches.  ``caches`` from cache_init.
+    A serving path: skips the (dead) MoE aux-loss work, returns (x, caches)."""
     seq_len = x.shape[1]
     new_caches = []
-    aux_total = jnp.zeros((), jnp.float32)
     for (specs, n), gp, gc in zip(groups_of(cfg), groups_params, caches):
-        def body(carry, inp, specs=specs):
-            xc, aux = carry
+        def body(xc, inp, specs=specs):
             xc = ctx.constrain(xc, ctx.BATCH, None, None)
             layer_p, cache = inp
             out_cache = {}
@@ -240,12 +239,11 @@ def stack_prefill(groups_params, cfg: ModelConfig, x, positions, caches, *,
                                               lambda a: a.astype(cfg.dtype), xkv)}
                 else:
                     out_cache[f"b{i}"] = new_mixer
-                xc, a = _ffn(p, cfg, xc)
-                aux = aux + a
-            return (xc, aux), out_cache
-        (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), (gp, gc))
+                xc, _ = _ffn(p, cfg, xc, impl=impl, want_aux=False)
+            return xc, out_cache
+        x, nc = jax.lax.scan(body, x, (gp, gc))
         new_caches.append(nc)
-    return x, aux_total, new_caches
+    return x, new_caches
 
 
 def stack_paged_decode(groups_params, cfg: ModelConfig, x, caches,

@@ -57,30 +57,15 @@ def test_decode_matches_forward(arch, reduced):
     """Stepwise decode from a mid-sequence prefill reproduces the
     full-sequence forward logits.
 
-    MoE configs (arctic/granite) xfail — root cause, verified numerically:
-    ``moe.moe_apply``'s capacity-drop dispatch is *cohort-dependent*, so
-    the three execution paths route differently whenever an expert
-    overflows.  (1) ``capacity(B*S)`` scales with the total token count:
-    at this test's shapes the forward pass (t=48) gets capacity 30, the
-    prefill (t=40) 25, and a decode step (t=2) the floor of 8 — a decode
-    cohort can never overflow, so decode keeps assignments that forward
-    dropped (granite @ seed 0: forward expert loads [19,33,29,15] vs cap
-    30 → 3 drops; prefill [14,28,25,13] vs cap 25 → a *different* 3).
-    (2) Drop rank is computed in batch-major flat order, so whether a
-    token is kept depends on router choices of other sequences' (and,
-    relative to decode order, future) tokens — no single-token decode can
-    reproduce it.  Dropped tokens fall back to the residual path, shifting
-    logits well past tolerance.  A fix must make routing cohort-
-    independent (dropless dispatch, or per-row causal rank with a
-    t-independent capacity); until then the serving paths are internally
-    consistent (decode == decode) but not drop-identical to training
-    forward."""
+    This includes the MoE configs (arctic/granite): the default
+    ``moe_dispatch="dropless"`` routes every token through exactly its own
+    top-k experts with row-local combine weights, so routing no longer
+    depends on the cohort the token is computed in.  (The legacy
+    ``"capacity"`` dispatch is cohort-dependent — ``capacity(B*S)`` scales
+    with the total token count and drop rank spans the batch-major flat
+    cohort — and cannot pass this test when an expert overflows; see
+    ``tests/test_moe.py`` for its drop/renormalization semantics.)"""
     cfg = reduced[arch]
-    if cfg.ffn_kind == "moe":
-        pytest.xfail("capacity-drop MoE dispatch is cohort-dependent: "
-                     "capacity(B*S) differs across forward/prefill/decode "
-                     "and drop rank spans the flat batch-major cohort — "
-                     "see docstring for the numeric root cause")
     p = init_params(RNG, cfg)
     S = 24
     batch = synth_batch(RNG, cfg, S, 2, "prefill")

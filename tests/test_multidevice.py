@@ -120,6 +120,46 @@ def test_pipeline_parallel_matches_sequential():
     assert "PIPELINE_OK" in out
 
 
+def test_ep_sharded_dropless_moe_matches_single_device():
+    """Dropless grouped dispatch with the expert axis sharded over the
+    model (EP) axis of a (2, 2) mesh matches the single-device reference."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import ARCHS
+        from repro.models import forward, init_params, synth_batch
+        from repro.parallel import sharding as SH
+        from repro.parallel.compat import auto_axis_types, make_mesh
+
+        cfg = ARCHS["granite-moe-1b-a400m"].reduced()
+        assert cfg.moe_dispatch == "dropless" and cfg.n_experts == 4
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        batch = synth_batch(jax.random.PRNGKey(1), cfg, 16, 4, "prefill")
+        fwd = lambda p, b: forward(p, cfg, b, remat=False)
+        h1, _ = jax.jit(fwd)(p, batch)
+
+        mesh = make_mesh((2, 2), ("data", "model"),
+                         axis_types=auto_axis_types(2))
+        rules = SH.ShardingRules()
+        specs = SH.param_specs(p, rules)
+        # the expert axis of the stacked (L, E, D, F) weights rides the
+        # model axis (EP): 4 experts over 2 devices
+        gspec = specs["groups"][0]["b0"]["ffn"]["w_gate"]
+        assert gspec[1] == "model", gspec
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+        bsh = jax.tree.map(
+            lambda x: NamedSharding(mesh, P("data", *([None]*(x.ndim-1)))),
+            batch)
+        h2, _ = jax.jit(fwd, in_shardings=(psh, bsh))(
+            jax.device_put(p, psh), jax.device_put(batch, bsh))
+        np.testing.assert_allclose(np.asarray(h1, np.float32),
+                                   np.asarray(h2, np.float32),
+                                   atol=2e-3, rtol=1e-2)
+        print("EP_MOE_OK")
+    """, n=4)
+    assert "EP_MOE_OK" in out
+
+
 def test_compressed_psum_error_feedback():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
