@@ -201,16 +201,33 @@ BUILDERS = {"ppo": build_ppo, "dpo": build_dpo, "grpo": build_grpo,
             "remax": build_remax}
 
 
-def unroll_iterations(dfg: DataflowGraph, k: int) -> DataflowGraph:
-    """The paper's concatenated graph G over k training iterations (§4):
-    per-iteration data edges plus parameter-version edges — any call on a
-    TRAINABLE model at iteration t+1 waits for that model's training at t;
-    frozen-model calls (ref/reward) overlap freely across iterations."""
+# ------------------------------------------------- concatenated iterations
+
+def base_name(name: str) -> str:
+    """Call name with the unrolled-graph iteration suffix stripped:
+    ``"actor_gen@3" -> "actor_gen"``.  Plain names pass through."""
+    return name.split("@", 1)[0]
+
+
+def iteration_of(name: str, default: int = 0) -> int:
+    """Iteration index encoded in an unrolled call name (``default`` for
+    plain, un-suffixed names)."""
+    _, _, suffix = name.partition("@")
+    return int(suffix) if suffix.isdigit() else default
+
+
+def unroll_window(dfg: DataflowGraph, k: int, start: int = 0) -> DataflowGraph:
+    """A ``k``-iteration window ``[start, start+k)`` of the concatenated
+    graph.  Windows stitch: the first iteration of a ``start > 0`` window
+    keeps its version-edge inputs referencing ``@{start-1}``, which have no
+    producer *inside* the window — the scheduler (or a caller gluing two
+    windows together) resolves them against the previous window's training
+    outputs.  ``unroll_window(dfg, k, 0)`` is the full concatenated graph."""
     trainable = dfg.trainable_models()
     train_call_of = {c.model_name: c.name for c in dfg.calls
                      if c.call_type == TRAIN}
     calls = []
-    for t in range(k):
+    for t in range(start, start + k):
         for c in dfg.calls:
             inputs = tuple(f"{i}@{t}" for i in c.inputs)
             outputs = tuple(f"{o}@{t}" for o in c.outputs)
@@ -222,3 +239,11 @@ def unroll_iterations(dfg: DataflowGraph, k: int) -> DataflowGraph:
             calls.append(dataclasses.replace(
                 c, name=f"{c.name}@{t}", inputs=inputs, outputs=outputs))
     return DataflowGraph(calls, dfg.algorithm + f"_x{k}")
+
+
+def unroll_iterations(dfg: DataflowGraph, k: int) -> DataflowGraph:
+    """The paper's concatenated graph G over k training iterations (§4):
+    per-iteration data edges plus parameter-version edges — any call on a
+    TRAINABLE model at iteration t+1 waits for that model's training at t;
+    frozen-model calls (ref/reward) overlap freely across iterations."""
+    return unroll_window(dfg, k, 0)

@@ -137,13 +137,17 @@ class CostModel:
     """
 
     def __init__(self, cluster: Cluster, profile: Profile | None = None,
-                 table=None, type_scales: dict[str, float] | None = None):
+                 table=None, type_scales: dict[str, float] | None = None,
+                 realloc_scale: float = 1.0):
         self.cluster = cluster
         self.prof = profile or Profile()
         self.table = table
         self.type_scales = dict(type_scales or {})
         # call_type -> [(measured_s, analytic_s)] fed by record_measurement
         self._samples: dict[str, list[tuple[float, float]]] = {}
+        # (predicted_s, measured_s) pairs from live ReshardTask timings
+        self.realloc_scale = realloc_scale
+        self._realloc_samples: list[tuple[float, float]] = []
 
     # ---- helper bandwidths -------------------------------------------------
     def _tp_bw(self, mesh) -> float:
@@ -167,15 +171,25 @@ class CostModel:
 
         Resolution order (paper §5.1): (1) an exact measured hit for this
         (call type, batch, seq_len, assignment shape) in ``table``; (2) the
-        analytic ``CallCost`` total scaled by the refitted per-call-type
-        multiplier (1.0 until ``refit`` has run).
+        paper's workload-space interpolation — ``ProfileTable.lookup``
+        restricted to measurements taken under the *same assignment shape*
+        (it needs >= 2 distinct profiled token counts for that shape, so a
+        lone measurement never extrapolates wildly and, critically, two
+        candidate assignments of one call never collapse onto the same
+        interpolated value); (3) the analytic ``CallCost`` total scaled by
+        the refitted per-call-type multiplier (1.0 until ``refit`` ran).
         """
         if self.table is not None:
-            hit = self.table.lookup_exact(
-                call.call_type, call.workload.batch, call.workload.seq_len,
-                self._exact_key(call, asg))
+            w, key = call.workload, self._exact_key(call, asg)
+            hit = self.table.lookup_exact(call.call_type, w.batch, w.seq_len,
+                                          key)
             if hit is not None:
                 return hit
+            if hasattr(self.table, "lookup"):
+                mid = self.table.lookup(call.call_type, w.batch, w.seq_len,
+                                        asg_key=key, min_points=2)
+                if mid is not None:
+                    return mid
         return (self.call_cost(call, asg).total
                 * self.type_scales.get(call.call_type, 1.0))
 
@@ -228,7 +242,8 @@ class CostModel:
         Per call type with >= ``min_samples`` samples, the scale is the
         median measured/analytic ratio (dimensionless) — the one-parameter
         analogue of the paper's per-layer profile fit, robust to stragglers.
-        Returns the updated mapping.
+        ``realloc_scale`` is refit the same way from recorded ``ReshardTask``
+        timings.  Returns the updated mapping.
         """
         for ct, samples in self._samples.items():
             if len(samples) < min_samples:
@@ -236,7 +251,32 @@ class CostModel:
             ratios = sorted(m / a for m, a in samples if a > 0)
             if ratios:
                 self.type_scales[ct] = ratios[len(ratios) // 2]
+        if len(self._realloc_samples) >= min_samples:
+            ratios = sorted(m / p for p, m in self._realloc_samples if p > 0)
+            if ratios:
+                self.realloc_scale = ratios[len(ratios) // 2]
         return self.type_scales
+
+    # ---- reallocation (parameter transfer) calibration -----------------------
+    def record_realloc(self, predicted_s: float, measured_s: float,
+                       nbytes: Optional[float] = None) -> None:
+        """Fold one measured reallocation (a completed ``ReshardTask``) into
+        the transfer cost model: ``predicted_s`` is the schedule time from
+        ``core.realloc.remap_schedule`` for the bytes that actually moved,
+        ``measured_s`` the observed dispatch-to-completion wall time.
+        Zero-byte (pure-alias) reshards carry no bandwidth information and
+        are ignored (pass ``nbytes`` when known; None means unknown)."""
+        if predicted_s <= 0.0 or measured_s <= 0.0:
+            return
+        if nbytes is not None and nbytes <= 0.0:
+            return
+        self._realloc_samples.append((predicted_s, measured_s))
+
+    def realloc_time(self, sched) -> float:
+        """Calibrated duration of a reallocation schedule in seconds — the
+        analytic ``Schedule.time`` rescaled by the fitted ratio of measured
+        ``ReshardTask`` wall times to their predictions (1.0 uncalibrated)."""
+        return sched.time * self.realloc_scale
 
     def n_measurements(self) -> int:
         """Total recorded measurement samples across call types."""

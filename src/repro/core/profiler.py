@@ -98,25 +98,41 @@ class ProfileTable:
             return got[0] if got is not None else None
         return self.entries.get((kind, batch, seq))
 
-    def lookup(self, kind: str, batch: int, seq: int) -> Optional[float]:
+    def lookup(self, kind: str, batch: int, seq: int,
+               asg_key: Optional[str] = None,
+               min_points: int = 1) -> Optional[float]:
         """Paper's estimator behaviour, in seconds: exact hit, else linear
         interpolation between the nearest profiled token counts, else linear
         *extrapolation* continuing the slope of the nearest segment (the
         fixed per-call overhead survives below the grid; growth beyond the
         grid follows the last measured trend instead of a through-origin
-        ray)."""
-        if (kind, batch, seq) in self.entries:
-            return self.entries[(kind, batch, seq)]
+        ray).
+
+        With ``asg_key`` the interpolation runs over the ``by_asg``
+        measurements of that assignment shape only — the mid tier of
+        ``CostModel.call_time``, which must never blur measurements across
+        parallelization strategies.  ``min_points`` is the minimum number of
+        distinct profiled token counts required before answering (None
+        otherwise); 2 disables the single-point proportional fallback.
+        """
+        exact = self.lookup_exact(kind, batch, seq, asg_key)
+        if exact is not None:
+            return exact
         tokens = batch * seq
         # distinct (batch, seq) points can share a token count (e.g. 8x96
         # and 24x32): collapse them to their mean so segment slopes are
         # well-defined
         by_tokens: dict[int, list[float]] = {}
-        for (k, b, s), t in self.entries.items():
-            if k == kind:
-                by_tokens.setdefault(b * s, []).append(t)
+        if asg_key is None:
+            for (k, b, s), t in self.entries.items():
+                if k == kind:
+                    by_tokens.setdefault(b * s, []).append(t)
+        else:
+            for (k, b, s, a), (t, _n) in self.by_asg.items():
+                if k == kind and a == asg_key:
+                    by_tokens.setdefault(b * s, []).append(t)
         pts = sorted((x, sum(ts) / len(ts)) for x, ts in by_tokens.items())
-        if not pts:
+        if not pts or len(pts) < min_points:
             return None
         if len(pts) == 1:  # no slope information: proportional fallback
             return pts[0][1] * tokens / pts[0][0]
@@ -281,6 +297,7 @@ class ProfileEntry:
     table: ProfileTable
     profile: Profile
     type_scales: dict = dataclasses.field(default_factory=dict)
+    realloc_scale: float = 1.0  # fitted ReshardTask measured/predicted ratio
 
     @property
     def key(self) -> str:
@@ -290,7 +307,8 @@ class ProfileEntry:
         """A calibrated ``CostModel``: fitted global scales + per-call-type
         multipliers + the measurement table for exact-hit overrides."""
         return CostModel(cluster, profile=self.profile, table=self.table,
-                         type_scales=dict(self.type_scales))
+                         type_scales=dict(self.type_scales),
+                         realloc_scale=self.realloc_scale)
 
     def age_s(self) -> float:
         """Entry age in seconds (for ``ProfileStore.get`` staleness)."""
@@ -304,6 +322,7 @@ class ProfileEntry:
             "table": self.table.to_json(),
             "profile": dataclasses.asdict(self.profile),
             "type_scales": dict(self.type_scales),
+            "realloc_scale": self.realloc_scale,
         }
 
     @classmethod
@@ -312,7 +331,8 @@ class ProfileEntry:
                    float(d.get("created_at", 0.0)),
                    ProfileTable.from_json(d["table"]),
                    Profile(**d.get("profile", {})),
-                   dict(d.get("type_scales", {})))
+                   dict(d.get("type_scales", {})),
+                   float(d.get("realloc_scale", 1.0)))
 
 
 class ProfileStore:
@@ -394,7 +414,8 @@ class ProfileStore:
             ProfileTable(model_name, {})
         entry = ProfileEntry(model_name, fingerprint or hw.fingerprint(),
                              time.time(), table, cost.prof,
-                             dict(cost.type_scales))
+                             dict(cost.type_scales),
+                             getattr(cost, "realloc_scale", 1.0))
         return self.put(entry, merge=False)
 
 

@@ -76,7 +76,15 @@ class Schedule:
     ops: list[CommOp]
     total_bytes: float
     time: float
+    # total_bytes counts only bytes actually put on the wire — the
+    # planning-level counterpart of realloc_exec.ReshardTask.moved_bytes
     local_hits: int  # dst already held the piece (no transfer)
+
+    def moved_layers(self) -> set[int]:
+        """Indices of the (pseudo-)layers with at least one transfer op —
+        the per-leaf move plan: layers absent here keep their layout and
+        their parameter leaves alias through the partial reshard."""
+        return {op.layer for op in self.ops}
 
 
 def _cost_class(src: int, dst: int, cluster: Cluster) -> int:

@@ -10,15 +10,40 @@ meshes serialize; disjoint meshes dispatch concurrently — on a real fleet the
 async dispatch becomes requests to per-host processes via jax.distributed,
 and on CPU it degrades gracefully to sequential execution).
 
+Pipelined multi-iteration execution (paper §4): ``run(steps=k)`` executes
+the *concatenated* dataflow graph over k iterations on one persistent event
+loop.  The dependency structure is the one ``dfg.unroll_iterations`` builds
+— per-iteration data edges plus parameter-version edges — materialized as a
+sliding window: iteration t's calls launch once iteration ``t -
+pipeline_depth`` has retired, so at most ``pipeline_depth`` iterations are
+in flight and *in-flight* data-pool memory stays bounded (retired pools are
+returned to the caller — stream them through ``on_retire`` with
+``keep_pools=False`` on long runs).  Version edges gate
+trainable models (actor_gen@t+1 waits for actor_train@t — rollouts are
+never generated from stale weights), while frozen-model inference
+(ref/reward) and parameter reallocations overlap iteration boundaries
+freely.  Each iteration owns a private data pool; pools are retired in
+order, which is where checkpointing and recalibration hooks fire.  With
+``pipeline_depth=1`` the window degenerates to the barriered engine and
+reproduces its data pools bit-for-bit; ``run_iteration`` remains the
+single-iteration (barriered) entry point.
+
 Reallocation overlap (paper §6, Fig. 6): every model gets a *prefetch chain*
 — an asyncio task that walks the model's calls in dataflow order and kicks
 off the next call's reallocation the moment the previous call on that model
 finishes, i.e. as soon as the model's mesh is free and before the call's
-device locks are taken.  The reshard's collectives then run underneath
-whatever other calls are computing; by the time the call itself reaches
+device locks are taken.  In ``run(steps=k)`` the chains span iteration
+boundaries: the actor's first reallocation of iteration t+1 dispatches as
+soon as actor_train@t frees the mesh, hiding under whatever iteration-t
+tail work (e.g. critic_train) is still computing.  The reshard's collectives
+run underneath other calls; by the time the call itself reaches
 ``_maybe_reallocate`` the transfer is usually done and it records a
-*prefetch hit* (``CallRecord.prefetch_hit``, ``stats()["prefetch_hits"]``)
-with only the residual wait on the clock instead of the full transfer.
+*prefetch hit* (``CallRecord.prefetch_hit``, cross-iteration ones also in
+``stats()["cross_iter_prefetch_hits"]``) with only the residual wait on the
+clock.  Prefetch is byte-accurate: ``realloc_exec.prefetch_reshard``
+dispatches only the sub-tree of leaves whose layout changes, and the moved
+bytes plus the measured transfer time of each ``ReshardTask`` are folded
+into the cost model's reallocation term (``CostModel.record_realloc``).
 
 Fault-tolerance hooks:
   * per-call deadline = straggler_factor x estimator time; breaches invoke
@@ -29,9 +54,10 @@ Fault-tolerance hooks:
 
 Closed-loop calibration (paper §5.1 + docs/CALIBRATION.md): with
 ``recalibrate_every=N`` the engine folds its own CallRecords back into the
-cost model at iteration boundaries, refits the per-call-type scales, and
+cost model at iteration *retirement*, refits the per-call-type scales, and
 replans onto a candidate plan when the refitted estimates flip the
-predicted ranking.
+predicted ranking (ranked on steady-state per-iteration time when
+``pipeline_depth > 1``).
 """
 
 from __future__ import annotations
@@ -41,11 +67,20 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
-import jax
-
-from repro.core.dfg import DataflowGraph, FunctionCall, TRAIN
+from repro.core.dfg import (DataflowGraph, FunctionCall, TRAIN, base_name,
+                            iteration_of, unroll_iterations)
 from repro.core.estimator import CostModel
 from repro.core.plan import Assignment, ExecutionPlan
+
+
+def _silent_wait(task):
+    """Block until a ReshardTask's transfer lands (stamping its
+    ``elapsed_s``), swallowing errors — timing is best-effort bookkeeping
+    and the consuming call re-waits (and surfaces failures) itself."""
+    try:
+        task.wait()
+    except Exception:  # noqa: BLE001
+        pass
 
 
 @dataclasses.dataclass
@@ -56,7 +91,8 @@ class ModelState:
     opt_state: Any = None
     assignment: Optional[Assignment] = None
     version: int = 0
-    # in-flight prefetched reallocation: (target assignment, ReshardTask)
+    # in-flight prefetched reallocation:
+    # (target assignment, ReshardTask, meta dict with "cross"/"sched")
     prefetch: Optional[tuple] = None
 
 
@@ -69,6 +105,9 @@ class CallRecord:
     straggled: bool = False
     retried: bool = False
     prefetch_hit: bool = False
+    iteration: int = 0
+    realloc_bytes: int = 0  # bytes actually moved by the partial reshard
+    prefetch_cross: bool = False  # hit on a prefetch spanning iterations
 
 
 class RuntimeEngine:
@@ -79,6 +118,7 @@ class RuntimeEngine:
                  straggler_factor: float = 10.0,
                  on_straggler: Optional[Callable] = None,
                  prefetch_realloc: bool = True,
+                 pipeline_depth: int = 1,
                  recalibrate_every: int = 0,
                  plan_candidates: Optional[list[ExecutionPlan]] = None,
                  on_recalibrate: Optional[Callable] = None):
@@ -88,14 +128,22 @@ class RuntimeEngine:
         None to skip physical resharding, e.g. single-device tests).
         ``prefetch_realloc`` enables the overlapped-reallocation chains.
 
+        ``pipeline_depth`` is the default iteration window of ``run``: how
+        many iterations of the concatenated graph may be in flight at once
+        (1 = barriered).  Depths > 1 stay on-policy for PPO because the
+        version edges always gate trainable models; only frozen-model work
+        and reallocations cross the boundary.
+
         ``recalibrate_every=N`` (opt-in; needs ``cost_model``) closes the
         profile->estimate loop at runtime: once N new CallRecords exist at
-        an iteration boundary, their measured times are folded into the cost
-        model (``record_measurement`` + per-call-type ``refit``), the
+        an iteration retirement, their measured times are folded into the
+        cost model (``record_measurement`` + per-call-type ``refit``), the
         current plan is re-ranked against ``plan_candidates`` under the
         refitted estimates, and ``replan()`` fires when the predicted
         ranking flips.  ``on_recalibrate(n, switched)`` observes each pass.
         """
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
         self.dfg = dfg
         self.plan = plan
         self.executors = executors
@@ -105,21 +153,37 @@ class RuntimeEngine:
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler or (lambda *a: None)
         self.prefetch_realloc = prefetch_realloc
+        self.pipeline_depth = pipeline_depth
         self.recalibrate_every = recalibrate_every
         self.plan_candidates = list(plan_candidates or [])
         self.on_recalibrate = on_recalibrate or (lambda *a: None)
         self.recalibrations = 0
         self.replans = 0
+        self.iterations_done = 0
+        self._iter_base = 0
         self._recorded_upto = 0  # records already folded into the cost model
+        self._template = None  # cached (intra, cross) dependency structure
         self.records: list[CallRecord] = []
-        m = plan.cluster.devs_per_node
         self._dev_locks: dict[int, asyncio.Lock] = {}
         self._model_locks: dict[str, asyncio.Lock] = {}
         self._model_users: dict[str, int] = {}
         self._model_idle: dict[str, asyncio.Condition] = {}
+        self._rebuild_mesh_devs()
+
+    # ------------------------------------------------------------ plan lookup
+    def _assignment_for(self, name: str) -> Assignment:
+        """Planned assignment of a call, resolving unrolled ``name@t`` names
+        against the per-iteration plan (assignments repeat every iteration)."""
+        asg = self.plan.assignments.get(name)
+        if asg is None:
+            asg = self.plan.assignments[base_name(name)]
+        return asg
+
+    def _rebuild_mesh_devs(self):
+        m = self.plan.cluster.devs_per_node
         self._mesh_devs = {
-            c.name: sorted(plan.assignments[c.name].mesh.devices(m))
-            for c in dfg.calls}
+            c.name: sorted(self._assignment_for(c.name).mesh.devices(m))
+            for c in self.dfg.calls}
 
     # ------------------------------------------------------------- realloc
     def _model_call_chains(self) -> dict[str, list[FunctionCall]]:
@@ -148,14 +212,40 @@ class RuntimeEngine:
             await cond.wait_for(
                 lambda: self._model_users.get(model_name, 0) == 0)
 
-    async def _prefetch_for(self, call: FunctionCall):
+    def _sched_for(self, call: FunctionCall, src: Optional[Assignment],
+                   dst: Assignment):
+        """Fig. 6 remap schedule for this reallocation (None when there is
+        no analytic reference — toy calls or an unknown source layout)."""
+        if call.config is None or src is None or src == dst:
+            return None
+        from repro.core import realloc
+        try:
+            return realloc.remap_schedule(call.config, src, dst,
+                                          self.plan.cluster)
+        except Exception:  # noqa: BLE001 — bookkeeping only, never fatal
+            return None
+
+    def _fold_realloc(self, sched, task) -> None:
+        """Fold one completed ReshardTask into the cost model's reallocation
+        term (moved bytes + measured transfer time vs the schedule's
+        prediction).  Pure-alias reshards (0 bytes moved) are skipped."""
+        if (self.cost is None or sched is None or task is None
+                or task.moved_bytes <= 0 or not task.elapsed_s):
+            return
+        self.cost.record_realloc(sched.time, task.elapsed_s,
+                                 task.moved_bytes)
+
+    async def _prefetch_for(self, call: FunctionCall, *, cross: bool = False):
         """Dispatch the reallocation for ``call`` ahead of its execution.
 
         Runs with the model lock held so it never races the synchronous
         path in ``_maybe_reallocate``; the actual transfer proceeds in the
-        background after dispatch (JAX arrays are futures)."""
+        background after dispatch (JAX arrays are futures).  ``cross`` marks
+        a prefetch whose trigger (the model's previous call) completed in an
+        earlier iteration — the cross-iteration overlap of the pipelined
+        runtime."""
         st = self.models[call.model_name]
-        target = self.plan.assignments[call.name]
+        target = self._assignment_for(call.name)
         if st.assignment == target or self.sharding_for is None:
             return
         async with self._model_locks[call.model_name]:
@@ -164,6 +254,7 @@ class RuntimeEngine:
             dst = self.sharding_for(call.model_name, target)
             if dst is None:
                 return
+            sched = self._sched_for(call, st.assignment, target)
             await self._await_model_idle(call.model_name)
             from repro.parallel import realloc_exec
             loop = asyncio.get_running_loop()
@@ -178,51 +269,88 @@ class RuntimeEngine:
                 return task
 
             task = await loop.run_in_executor(None, dispatch)
-            st.prefetch = (target, task)
+            # a background waiter stamps task.elapsed_s at *transfer*
+            # completion — the consuming call may arrive much later, and
+            # its residual wait must not masquerade as transfer time in
+            # the realloc calibration
+            waiter = loop.run_in_executor(None, _silent_wait, task)
+            st.prefetch = (target, task,
+                           {"cross": cross, "sched": sched,
+                            "waiter": waiter})
 
-    async def _prefetch_chain(self, calls: list[FunctionCall],
-                              done: dict[str, asyncio.Event]):
-        """Walk one model's calls in order; prefetch each call's realloc as
-        soon as the previous call on the model has released its mesh."""
-        prev = None
-        for call in calls:
-            if prev is not None:
-                await done[prev.name].wait()
-            try:
-                await self._prefetch_for(call)
-            except Exception:  # noqa: BLE001 — best-effort; sync path redoes it
-                pass
-            prev = call
+    async def _prefetch_chain(self, calls: list[FunctionCall], steps: int,
+                              done: dict[str, asyncio.Event],
+                              admitted: list[asyncio.Event]):
+        """Walk one model's calls in order across the whole run; prefetch
+        each call's realloc as soon as the model's previous call — possibly
+        in the previous iteration — has released its mesh."""
+        prev = None  # (call name, iteration)
+        for t in range(steps):
+            await admitted[t].wait()
+            for call in calls:
+                if prev is not None:
+                    await done[f"{prev[0]}@{prev[1]}"].wait()
+                try:
+                    await self._prefetch_for(
+                        call, cross=prev is not None and prev[1] < t)
+                except Exception:  # noqa: BLE001 — best-effort; sync path redoes it
+                    pass
+                prev = (call.name, t)
 
-    async def _maybe_reallocate(self, call: FunctionCall) -> tuple[float, bool]:
-        """Move the call's model to its planned assignment.
-        Returns (seconds on the critical path, prefetch_hit)."""
+    async def _maybe_reallocate(
+            self, call: FunctionCall) -> tuple[float, bool, bool, int]:
+        """Move the call's model to its planned assignment.  Returns
+        (seconds on the critical path, prefetch_hit, cross-iteration hit,
+        bytes moved on the critical path)."""
         st = self.models[call.model_name]
-        target = self.plan.assignments[call.name]
+        target = self._assignment_for(call.name)
         if st.assignment == target:
-            return 0.0, False
+            return 0.0, False, False, 0
         async with self._model_locks.setdefault(call.model_name,
                                                 asyncio.Lock()):
             t0 = time.monotonic()
             loop = asyncio.get_running_loop()
             if st.prefetch is not None:
-                pf_target, pf_task = st.prefetch
+                pf_target, pf_task, pf_meta = st.prefetch
                 st.prefetch = None
+                waiter = pf_meta.get("waiter")
                 if pf_target == target:
                     # only the residual wait is on the critical path
+                    if waiter is not None:
+                        await waiter
                     await loop.run_in_executor(None, pf_task.wait)
                     st.assignment = target
-                    return time.monotonic() - t0, True
+                    self._fold_realloc(pf_meta.get("sched"), pf_task)
+                    return (time.monotonic() - t0, True,
+                            bool(pf_meta.get("cross")), pf_task.moved_bytes)
+                # mismatched prefetch (e.g. a replan changed the target):
+                # the dispatched reshard already moved st.params to the
+                # prefetched layout, so that is the true source of the
+                # fresh reshard below; drain it first so the fresh
+                # reshard's measured time covers only its own hop
+                if waiter is not None:
+                    await waiter
+                st.assignment = pf_target
+            moved = 0
             if self.sharding_for is not None:
                 dst = self.sharding_for(call.model_name, target)
                 if dst is not None:
                     await self._await_model_idle(call.model_name)
                     from repro.parallel import realloc_exec
+                    sched = self._sched_for(call, st.assignment, target)
                     params = st.params
-                    st.params = await loop.run_in_executor(
-                        None, lambda: realloc_exec.reshard(params, dst))
+
+                    def dispatch():
+                        task = realloc_exec.prefetch_reshard(params, dst)
+                        st.params = task.tree
+                        return task
+
+                    task = await loop.run_in_executor(None, dispatch)
+                    await loop.run_in_executor(None, task.wait)
+                    self._fold_realloc(sched, task)
+                    moved = task.moved_bytes
             st.assignment = target
-            return time.monotonic() - t0, False
+            return time.monotonic() - t0, False, False, moved
 
     # ------------------------------------------------------------- dispatch
     async def _locks_for(self, name: str):
@@ -233,29 +361,40 @@ class RuntimeEngine:
             locks.append(self._dev_locks[d])
         return locks
 
-    async def _run_call(self, call: FunctionCall, data: dict,
-                        done: dict[str, asyncio.Event]):
-        for p in self.dfg.parents(call):
-            await done[p.name].wait()
+    async def _run_call(self, call: FunctionCall, t: int,
+                        pools: dict[int, dict],
+                        done: dict[str, asyncio.Event],
+                        intra: dict[str, list[str]],
+                        cross: dict[str, list[str]]):
+        for p in intra[call.name]:
+            await done[f"{p}@{t}"].wait()
+        if t > 0:  # version edges into the previous iteration
+            for p in cross[call.name]:
+                await done[f"{p}@{t - 1}"].wait()
+        data = pools[t]
         locks = await self._locks_for(call.name)
         for lk in locks:  # deterministic (device-id) order: no deadlock
             await lk.acquire()
         try:
-            realloc_s, prefetch_hit = await self._maybe_reallocate(call)
+            realloc_s, prefetch_hit, cross_hit, moved = \
+                await self._maybe_reallocate(call)
             deadline = None
             if self.cost is not None:
                 deadline = self.straggler_factor * self.cost.call_time(
-                    call, self.plan.assignments[call.name])
+                    call, self._assignment_for(call.name))
             t0 = time.monotonic()
             inputs = {k: data[k] for k in call.inputs if k in data}
             loop = asyncio.get_running_loop()
+
+            fn = self.executors.get(call.name) \
+                or self.executors[base_name(call.name)]
 
             async def execute():
                 self._begin_use(call.model_name)
                 try:
                     return await loop.run_in_executor(
-                        None, lambda: self.executors[call.name](
-                            self.models[call.model_name], inputs))
+                        None, lambda: fn(self.models[call.model_name],
+                                         inputs))
                 finally:
                     await self._end_use(call.model_name)
 
@@ -275,43 +414,181 @@ class RuntimeEngine:
             if call.call_type == TRAIN:
                 self.models[call.model_name].version += 1
             data.update(out or {})
-            self.records.append(CallRecord(call.name, t0, t1, realloc_s,
-                                           straggled, retried, prefetch_hit))
+            self.records.append(CallRecord(
+                call.name, t0, t1, realloc_s, straggled, retried,
+                prefetch_hit, iteration=self._iter_base + t,
+                realloc_bytes=moved, prefetch_cross=cross_hit))
         finally:
             for lk in reversed(locks):
                 lk.release()
-        done[call.name].set()
+        done[f"{call.name}@{t}"].set()
 
-    async def _run_iteration_async(self, data: dict) -> dict:
-        done = {c.name: asyncio.Event() for c in self.dfg.calls}
+    # ------------------------------------------------- pipelined scheduling
+    def _dependency_template(self) -> tuple[dict, dict]:
+        """Per-call dependency structure of the concatenated graph, derived
+        from ``dfg.unroll_iterations`` so the runtime and the simulator agree
+        on the edges: ``intra[name]`` are same-iteration parents, and
+        ``cross[name]`` the previous-iteration parents (the parameter-version
+        edges that keep trainable models on-policy)."""
+        if self._template is None:
+            intra: dict[str, list[str]] = {}
+            cross: dict[str, list[str]] = {}
+            if any("@" in c.name for c in self.dfg.calls):
+                # already-unrolled graph: run it flat as one "iteration"
+                for c in self.dfg.calls:
+                    intra[c.name] = [p.name for p in self.dfg.parents(c)]
+                    cross[c.name] = []
+            else:
+                g2 = unroll_iterations(self.dfg, 2)
+                for c in self.dfg.calls:
+                    parents = g2.parents(g2.by_name[f"{c.name}@1"])
+                    intra[c.name] = [base_name(p.name) for p in parents
+                                     if iteration_of(p.name) == 1]
+                    cross[c.name] = [base_name(p.name) for p in parents
+                                     if iteration_of(p.name) == 0]
+            self._template = (intra, cross)
+        return self._template
+
+    async def _run_pipelined(self, steps: int, depth: int, data_for,
+                             on_retire, keep_pools: bool,
+                             quiesce_on_retire: bool) -> list:
+        intra, cross = self._dependency_template()
+        done: dict[str, asyncio.Event] = {}
+        pools: dict[int, dict] = {}
+        results: list = [None] * steps
+        admitted = [asyncio.Event() for _ in range(steps)]
+        retire_cond = asyncio.Condition()
+        state = {"retired": 0, "failed": False}
+
+        async def run_iter(t: int):
+            try:
+                await asyncio.gather(*(
+                    self._run_call(c, t, pools, done, intra, cross)
+                    for c in self.dfg.calls))
+                # retire strictly in iteration order: pools hand back, then
+                # checkpoint/recalibration observe a consistent prefix
+                async with retire_cond:
+                    await retire_cond.wait_for(
+                        lambda: state["failed"] or state["retired"] == t)
+                    if state["failed"]:
+                        return
+                    pool = pools.pop(t)
+                    if keep_pools:
+                        results[t] = pool
+                    self.iterations_done += 1
+                    if on_retire is not None:
+                        if quiesce_on_retire:
+                            # drain running executors first: a hook that
+                            # snapshots model state (checkpointing) must
+                            # never read buffers a concurrent train step
+                            # donated.  The hook itself runs synchronously
+                            # in the loop thread, so no new call can start
+                            # underneath it.
+                            for m in self.models:
+                                await self._await_model_idle(m)
+                        on_retire(self._iter_base + t, pool)
+                    if (self.recalibrate_every > 0 and self.cost is not None
+                            and len(self.records) - self._recorded_upto
+                            >= self.recalibrate_every):
+                        self.recalibrate()
+                    state["retired"] = t + 1
+                    retire_cond.notify_all()
+            except Exception:
+                # wake the admission loop and sibling retirements so the
+                # failure propagates instead of deadlocking the window
+                async with retire_cond:
+                    state["failed"] = True
+                    retire_cond.notify_all()
+                raise
+
         prefetchers = []
         if self.prefetch_realloc and self.sharding_for is not None:
             prefetchers = [
-                asyncio.create_task(self._prefetch_chain(calls, done))
+                asyncio.create_task(
+                    self._prefetch_chain(calls, steps, done, admitted))
                 for calls in self._model_call_chains().values()]
+        iter_tasks: list[asyncio.Task] = []
         try:
-            await asyncio.gather(*(self._run_call(c, data, done)
-                                   for c in self.dfg.calls))
+            for t in range(steps):
+                # sliding window: admit t once t - depth has retired
+                async with retire_cond:
+                    await retire_cond.wait_for(
+                        lambda: state["failed"]
+                        or state["retired"] >= t - (depth - 1))
+                    if state["failed"]:
+                        break
+                pools[t] = dict(data_for(t))
+                for c in self.dfg.calls:
+                    done[f"{c.name}@{t}"] = asyncio.Event()
+                admitted[t].set()
+                iter_tasks.append(asyncio.create_task(run_iter(t)))
+            await asyncio.gather(*iter_tasks)
         finally:
-            for t in prefetchers:
-                t.cancel()
-            if prefetchers:
-                await asyncio.gather(*prefetchers, return_exceptions=True)
-        return data
+            for tk in prefetchers:
+                tk.cancel()
+            for tk in iter_tasks:
+                if not tk.done():
+                    tk.cancel()
+            await asyncio.gather(*prefetchers, *iter_tasks,
+                                 return_exceptions=True)
+        return results
 
-    def run_iteration(self, initial_data: dict) -> dict:
-        """Execute one full dataflow-graph iteration; returns the data pool."""
-        data = dict(initial_data)
+    def run(self, initial_data, steps: int = 1, *,
+            pipeline_depth: Optional[int] = None,
+            on_retire: Optional[Callable[[int, dict], None]] = None,
+            keep_pools: bool = True,
+            quiesce_on_retire: bool = False) -> list:
+        """Execute ``steps`` iterations of the concatenated dataflow graph on
+        one persistent event loop and return the per-iteration data pools in
+        order.
+
+        ``initial_data`` seeds each iteration's private pool: a callable
+        ``t -> dict``, a list of ``steps`` dicts, or a single dict template
+        (shallow-copied per iteration).  ``pipeline_depth`` (default: the
+        engine's) bounds the iterations in flight; depth 1 reproduces the
+        barriered per-iteration engine bit-for-bit.  ``on_retire(t, pool)``
+        fires as each iteration retires (in order) — the hook point for
+        checkpointing under pipelining.  The window bounds *in-flight* pool
+        memory; retired pools accumulate in the returned list, so long runs
+        should consume them via ``on_retire`` and pass ``keep_pools=False``
+        (the result is then a list of Nones).  ``quiesce_on_retire`` drains
+        running executors before each ``on_retire`` call — required when the
+        hook snapshots model state (donating train steps delete the buffers
+        they consume), at the cost of a pipeline stall per retirement.
+        """
+        depth = (pipeline_depth if pipeline_depth is not None
+                 else self.pipeline_depth)
+        if depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if steps > 1 and any("@" in c.name for c in self.dfg.calls):
+            raise ValueError(
+                "run(steps=k) unrolls the per-iteration graph itself; "
+                "construct the engine with the base dfg, not an unrolled one")
+        if callable(initial_data):
+            data_for = initial_data
+        elif isinstance(initial_data, (list, tuple)):
+            if len(initial_data) != steps:
+                raise ValueError(
+                    f"got {len(initial_data)} data pools for {steps} steps")
+            seq = list(initial_data)
+            data_for = seq.__getitem__
+        else:
+            template = initial_data
+            data_for = lambda t: template  # noqa: E731 — copied by the runner
         self._dev_locks = {}  # locks bind to the event loop of each run
         self._model_locks = {m: asyncio.Lock() for m in self.models}
         self._model_users = {m: 0 for m in self.models}
         self._model_idle = {}
-        out = asyncio.run(self._run_iteration_async(data))
-        if (self.recalibrate_every > 0 and self.cost is not None
-                and len(self.records) - self._recorded_upto
-                >= self.recalibrate_every):
-            self.recalibrate()
-        return out
+        self._iter_base = self.iterations_done
+        return asyncio.run(
+            self._run_pipelined(steps, depth, data_for, on_retire,
+                                keep_pools, quiesce_on_retire))
+
+    def run_iteration(self, initial_data: dict) -> dict:
+        """Execute one full dataflow-graph iteration (barriered: the event
+        loop and any in-flight prefetch chains are torn down at return);
+        returns the data pool."""
+        return self.run(initial_data, steps=1, pipeline_depth=1)[0]
 
     # --------------------------------------------------------- recalibration
     def recalibrate(self) -> bool:
@@ -319,17 +596,25 @@ class RuntimeEngine:
         per-call-type scales, and replan if a candidate plan now ranks ahead
         of the current one.  Returns True when a plan switch happened.
 
-        Retried records are excluded — their span covers the failed attempt
-        plus re-reallocation, not the call.  Straggled records stay: the
-        flag is relative to the (possibly uncalibrated) current estimate,
-        and the median refit tolerates genuine outliers.
+        Records are resolved by *base* call name, so ``name@t`` records from
+        an unrolled graph aggregate with (and calibrate) their per-iteration
+        call.  Retried records are excluded — their span covers the failed
+        attempt plus re-reallocation, not the call.  Straggled records stay:
+        the flag is relative to the (possibly uncalibrated) current
+        estimate, and the median refit tolerates genuine outliers.
         """
         for r in self.records[self._recorded_upto:]:
-            call = self.dfg.by_name.get(r.name)
-            if call is None or r.retried:
+            if r.retried:
                 continue
-            self.cost.record_measurement(call, self.plan.assignments[r.name],
-                                         r.end - r.start)
+            call = (self.dfg.by_name.get(r.name)
+                    or self.dfg.by_name.get(base_name(r.name)))
+            if call is None:
+                continue
+            asg = (self.plan.assignments.get(r.name)
+                   or self.plan.assignments.get(base_name(r.name)))
+            if asg is None:
+                continue
+            self.cost.record_measurement(call, asg, r.end - r.start)
         self._recorded_upto = len(self.records)
         self.cost.refit()
         self.recalibrations += 1
@@ -339,14 +624,27 @@ class RuntimeEngine:
 
     def _maybe_replan(self) -> bool:
         """Re-rank current plan vs candidates under the refitted estimates;
-        adopt a candidate only when it is strictly better (a ranking flip)."""
+        adopt a candidate only when it is strictly better (a ranking flip).
+        Pipelined engines rank on steady-state per-iteration time; the
+        unrolled graph is built once and shared across all candidates."""
         if not self.plan_candidates:
             return False
-        from repro.core.simulator import simulate
-        cur_t = simulate(self.dfg, self.plan, self.cost).total_time
+        from repro.core.simulator import simulate, steady_state_time
+        k = self.pipeline_depth + 1
+        unrolled = (unroll_iterations(self.dfg, k)
+                    if self.pipeline_depth > 1 and not any(
+                        "@" in c.name for c in self.dfg.calls) else None)
+
+        def metric(plan):
+            if unrolled is not None:
+                return steady_state_time(self.dfg, plan, self.cost, k,
+                                         unrolled=unrolled)
+            return simulate(self.dfg, plan, self.cost).total_time
+
+        cur_t = metric(self.plan)
         best, best_t = None, cur_t
         for cand in self.plan_candidates:
-            t = simulate(self.dfg, cand, self.cost).total_time
+            t = metric(cand)
             if t < best_t:
                 best, best_t = cand, t
         if best is None:
@@ -360,10 +658,7 @@ class RuntimeEngine:
         """Adopt a new execution plan (elastic resize / failed-node mask).
         Parameters physically move on the next call via reallocation."""
         self.plan = new_plan
-        m = new_plan.cluster.devs_per_node
-        self._mesh_devs = {
-            c.name: sorted(new_plan.assignments[c.name].mesh.devices(m))
-            for c in self.dfg.calls}
+        self._rebuild_mesh_devs()
 
     def stats(self) -> dict:
         if not self.records:
@@ -371,7 +666,10 @@ class RuntimeEngine:
         t0 = min(r.start for r in self.records)
         calls: dict[str, dict] = {}
         for r in self.records:
-            agg = calls.setdefault(r.name, {"count": 0, "total_s": 0.0})
+            # aggregate by base name: unrolled ``name@t`` records of one call
+            # fold into a single row
+            agg = calls.setdefault(base_name(r.name),
+                                   {"count": 0, "total_s": 0.0})
             agg["count"] += 1
             agg["total_s"] += r.end - r.start
         for agg in calls.values():
@@ -380,9 +678,13 @@ class RuntimeEngine:
         return {
             "wall_s": max(r.end for r in self.records) - t0,
             "realloc_s": sum(r.realloc_s for r in self.records),
+            "realloc_bytes": sum(r.realloc_bytes for r in self.records),
             "stragglers": sum(r.straggled for r in self.records),
             "retries": sum(r.retried for r in self.records),
             "prefetch_hits": sum(r.prefetch_hit for r in self.records),
+            "cross_iter_prefetch_hits": sum(r.prefetch_cross
+                                            for r in self.records),
+            "iterations": getattr(self, "iterations_done", 0),
             # getattr: stats() also serves partially-constructed engines
             "recalibrations": getattr(self, "recalibrations", 0),
             "replans": getattr(self, "replans", 0),

@@ -22,7 +22,8 @@ from repro.core.dfg import DataflowGraph, GENERATE, TRAIN
 from repro.core.estimator import CostModel, assignment_key
 from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
                              ParallelStrategy, strategies_for)
-from repro.core.simulator import max_mem_per_device, simulate
+from repro.core.simulator import (max_mem_per_device, simulate,
+                                  steady_state_time)
 
 
 @dataclasses.dataclass
@@ -67,15 +68,10 @@ def plan_cost(dfg: DataflowGraph, plan: ExecutionPlan, cost: CostModel,
     """Plan cost; with ``unrolled`` (the paper's concatenated k-iteration
     graph) the objective is the steady-state per-iteration time, which
     rewards cross-iteration overlap of frozen-model calls."""
-    t1 = simulate(dfg, plan, cost).total_time
     if unrolled is not None and k > 1:
-        big = ExecutionPlan(
-            {f"{n}@{t}": a for n, a in plan.assignments.items()
-             for t in range(k)}, plan.cluster)
-        tk = simulate(unrolled, big, cost).total_time
-        t = (tk - t1) / (k - 1)
+        t = steady_state_time(dfg, plan, cost, k, unrolled=unrolled)
     else:
-        t = t1
+        t = simulate(dfg, plan, cost).total_time
     mem = max_mem_per_device(dfg, plan, cost)
     feasible = mem < mem_cap
     c = t * (1.0 if feasible else alpha)

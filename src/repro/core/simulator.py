@@ -14,7 +14,8 @@ import itertools
 from typing import Optional
 
 from repro.core import realloc
-from repro.core.dfg import DataflowGraph, FunctionCall, GENERATE, TRAIN
+from repro.core.dfg import (DataflowGraph, FunctionCall, GENERATE, TRAIN,
+                            unroll_iterations)
 from repro.core.estimator import CostModel
 from repro.core.plan import Assignment, Cluster, ExecutionPlan
 
@@ -70,8 +71,10 @@ def build_augmented_graph(dfg: DataflowGraph, plan: ExecutionPlan,
             devs = prev.mesh.devices(m) | asg.mesh.devices(m)
             parents = ([last_call[call.model_name]]
                        if call.model_name in last_call else [])
+            dur = (cost.realloc_time(sched)
+                   if hasattr(cost, "realloc_time") else sched.time)
             nodes[rname] = SimNode(rname, "realloc", frozenset(devs),
-                                   sched.time, parents)
+                                   dur, parents)
             extra_parents[call.name].append(rname)
         param_loc[call.model_name] = asg
         last_call[call.model_name] = call.name
@@ -143,6 +146,32 @@ def simulate(dfg: DataflowGraph, plan: ExecutionPlan,
                          if n.kind == "realloc"),
         xfer_time=sum(n.duration for n in nodes.values() if n.kind == "xfer"),
     )
+
+
+def unrolled_plan(plan: ExecutionPlan, k: int) -> ExecutionPlan:
+    """The per-iteration plan expanded onto the concatenated k-iteration
+    graph: every call keeps its assignment across iterations."""
+    return ExecutionPlan(
+        {f"{n}@{t}": a for n, a in plan.assignments.items()
+         for t in range(k)}, plan.cluster)
+
+
+def steady_state_time(dfg: DataflowGraph, plan: ExecutionPlan,
+                      cost: CostModel, k: int = 3,
+                      unrolled: Optional[DataflowGraph] = None) -> float:
+    """Steady-state per-iteration time of the pipelined runtime: simulate the
+    concatenated k-iteration graph (version edges gate trainable models;
+    frozen-model calls and reallocations overlap iteration boundaries) and
+    difference out the cold-start makespan — ``(T_k - T_1) / (k - 1)``.
+    This is what the search should rank plans on when the runtime runs with
+    ``pipeline_depth > 1``; a single-iteration makespan penalizes plans whose
+    tail work (e.g. a long critic train) the pipeline would hide."""
+    if k <= 1:
+        return simulate(dfg, plan, cost).total_time
+    t1 = simulate(dfg, plan, cost).total_time
+    u = unrolled if unrolled is not None else unroll_iterations(dfg, k)
+    tk = simulate(u, unrolled_plan(plan, k), cost).total_time
+    return (tk - t1) / (k - 1)
 
 
 def max_mem_per_device(dfg: DataflowGraph, plan: ExecutionPlan,

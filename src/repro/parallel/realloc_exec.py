@@ -11,11 +11,23 @@ for moved ones).  Cross-mesh moves (disjoint device sets) go through one
 batched ``jax.device_put`` over the whole tree, which coalesces the
 per-leaf transfers into a single dispatch (ICI/DCN on real fleets).
 
+Byte-accurate dispatch: before anything is handed to XLA the tree is split
+into the sub-tree of leaves whose layout actually changes (the execution
+counterpart of ``core/realloc.remap_schedule``'s per-layer move plan) and
+the leaves already laid out as requested.  Only the moved sub-tree is
+dispatched; unchanged leaves alias — they are returned as the very same
+arrays, not round-tripped through a collective.  ``ReshardTask`` records
+the split (``moved_bytes`` / ``total_bytes`` / leaf counts) so the runtime
+can fold measured transfer times back into the estimator's reallocation
+cost model and benchmarks can regression-track moved bytes against the
+whole-tree path.
+
 ``prefetch_reshard`` exposes the asynchronous dispatch: it returns a
 ``ReshardTask`` immediately while the collectives run under whatever
 computation the caller overlaps them with (paper §6: reallocation hidden
 behind the critical path).  ``core/runtime.RuntimeEngine`` uses it to kick
-off a call's reallocation as soon as the model's mesh is free.
+off a call's reallocation as soon as the model's mesh is free — including
+across iteration boundaries in the pipelined ``run(steps=k)`` mode.
 """
 
 from __future__ import annotations
@@ -24,7 +36,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Any
+from typing import Any, Optional
 
 import jax
 
@@ -42,36 +54,80 @@ def _reshard_fn(treedef, src_shardings, dst_shardings, donate):
                    donate_argnums=(0,) if donate else ())
 
 
+def _leaf_bytes(leaf) -> int:
+    return int(leaf.size) * leaf.dtype.itemsize
+
+
+def _unchanged(leaf, dst_sharding) -> bool:
+    """True when the leaf is already laid out exactly as requested, so the
+    reshard may alias it instead of dispatching a move."""
+    src = getattr(leaf, "sharding", None)
+    if src is None or dst_sharding is None:
+        return False
+    if getattr(src, "device_set", None) != getattr(dst_sharding,
+                                                   "device_set", "x"):
+        return False
+    try:
+        return src.is_equivalent_to(dst_sharding, leaf.ndim)
+    except (AttributeError, TypeError):
+        return src == dst_sharding
+
+
 def _plan(tree, dst_sharding_tree):
+    """Flatten + classify: which leaves move, and whether the moved set stays
+    on the same device set (collective program) or crosses meshes."""
     leaves, treedef = jax.tree.flatten(tree)
     dst = jax.tree.leaves(dst_sharding_tree)
+    moves = [not _unchanged(l, d) for l, d in zip(leaves, dst)]
     src = [l.sharding if hasattr(l, "sharding") else None for l in leaves]
     same_devices = all(
         getattr(s, "device_set", None) == getattr(d, "device_set", "x")
-        for s, d in zip(src, dst))
-    return leaves, treedef, src, dst, same_devices
+        for s, d, m in zip(src, dst, moves) if m)
+    return leaves, treedef, src, dst, moves, same_devices
 
 
-def reshard(tree, dst_sharding_tree, *, donate: bool = True):
-    """Reallocate ``tree`` to the shardings in ``dst_sharding_tree``.
-
-    Uses a cached jitted identity when src/dst meshes share devices (pure
-    collective program).  With ``donate`` (the default) the source leaves
-    are donated to that program: leaves whose sharding is unchanged alias
-    their buffers and moved leaves are rewritten in place, so the caller
-    must not reuse ``tree`` afterwards.  Cross-mesh falls back to a single
-    batched ``jax.device_put`` over the whole tree."""
-    leaves, treedef, src, dst, same_devices = _plan(tree, dst_sharding_tree)
-    if same_devices and all(s is not None for s in src):
-        fn = _reshard_fn(treedef, tuple(src), tuple(dst), bool(donate))
+def _reshard_impl(tree, dst_sharding_tree, donate: bool):
+    """Returns (out_tree, moved_bytes, total_bytes, n_moved, n_aliased)."""
+    leaves, treedef, src, dst, moves, same_devices = _plan(
+        tree, dst_sharding_tree)
+    total = sum(_leaf_bytes(l) for l in leaves)
+    moved_leaves = [l for l, m in zip(leaves, moves) if m]
+    n_moved = len(moved_leaves)
+    n_aliased = len(leaves) - n_moved
+    if n_moved == 0:  # pure alias: nothing to dispatch
+        return jax.tree.unflatten(treedef, leaves), 0, total, 0, n_aliased
+    moved_bytes = sum(_leaf_bytes(l) for l in moved_leaves)
+    moved_src = tuple(s for s, m in zip(src, moves) if m)
+    moved_dst = [d for d, m in zip(dst, moves) if m]
+    sub_def = jax.tree.structure(list(moved_leaves))
+    if same_devices and all(s is not None for s in moved_src):
+        fn = _reshard_fn(sub_def, moved_src, tuple(moved_dst), bool(donate))
         with warnings.catch_warnings():
             # donation is best-effort: leaves XLA can't alias fall back to
             # a copy, which is exactly the pre-donation behaviour
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            return fn(tree)
-    return jax.device_put(jax.tree.unflatten(treedef, leaves),
-                          jax.tree.unflatten(treedef, list(dst)))
+            out_moved = fn(list(moved_leaves))
+    else:
+        out_moved = jax.device_put(list(moved_leaves), moved_dst)
+    it = iter(out_moved)
+    merged = [next(it) if m else l for l, m in zip(leaves, moves)]
+    return (jax.tree.unflatten(treedef, merged),
+            moved_bytes, total, n_moved, n_aliased)
+
+
+def reshard(tree, dst_sharding_tree, *, donate: bool = True):
+    """Reallocate ``tree`` to the shardings in ``dst_sharding_tree``.
+
+    Only the sub-tree of leaves whose layout changes is dispatched; leaves
+    already matching their destination sharding are returned as-is (alias,
+    zero bytes moved).  Moved leaves on a shared device set go through a
+    cached jitted identity (pure collective program); with ``donate`` (the
+    default) their source buffers are donated to it, so the caller must not
+    reuse ``tree`` afterwards.  Cross-mesh moves fall back to a single
+    batched ``jax.device_put`` over the moved sub-tree."""
+    out, *_ = _reshard_impl(tree, dst_sharding_tree, donate)
+    return out
 
 
 @dataclasses.dataclass
@@ -80,20 +136,33 @@ class ReshardTask:
 
     ``tree`` holds the destination arrays immediately (JAX arrays are
     futures); the collectives complete in the background.  ``wait()``
-    blocks until they land and returns the tree; ``done()`` polls."""
+    blocks until they land and returns the tree; ``done()`` polls.
+    ``moved_bytes``/``total_bytes`` record the byte-accurate split — how
+    much the partial dispatch actually moved vs the whole-tree size — and
+    ``elapsed_s`` (set once the transfer is observed complete) feeds the
+    estimator's measured reallocation cost model."""
 
     tree: Any
     dispatched_at: float
+    moved_bytes: int = 0
+    total_bytes: int = 0
+    n_moved: int = 0
+    n_aliased: int = 0
+    elapsed_s: Optional[float] = None
 
     def done(self) -> bool:
         for leaf in jax.tree.leaves(self.tree):
             ready = getattr(leaf, "is_ready", None)
             if ready is not None and not ready():
                 return False
+        if self.elapsed_s is None:
+            self.elapsed_s = time.monotonic() - self.dispatched_at
         return True
 
     def wait(self):
         jax.block_until_ready(self.tree)
+        if self.elapsed_s is None:
+            self.elapsed_s = time.monotonic() - self.dispatched_at
         return self.tree
 
 
@@ -105,10 +174,13 @@ def prefetch_reshard(tree, dst_sharding_tree, *,
     later computation (XLA serializes on the data dependency); callers that
     need the realloc off the critical path simply dispatch this early and
     ``wait()`` (usually a no-op) right before use.  As with ``reshard``,
-    ``donate=True`` invalidates the source tree."""
-    out = reshard(tree, dst_sharding_tree, donate=donate)
-    return ReshardTask(out, time.monotonic())
+    ``donate=True`` invalidates the source tree (unchanged leaves are
+    aliased, not donated — they stay valid by identity)."""
+    out, moved, total, n_moved, n_aliased = _reshard_impl(
+        tree, dst_sharding_tree, donate)
+    return ReshardTask(out, time.monotonic(), moved, total,
+                       n_moved, n_aliased)
 
 
 def realloc_bytes(tree) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    return sum(_leaf_bytes(l) for l in jax.tree.leaves(tree))

@@ -70,6 +70,17 @@ class ExperimentConfig:
     # fold live CallRecords back into the cost model and re-rank the plan
     # every N completed calls (0 = off); see RuntimeEngine.recalibrate
     recalibrate_every: int = 0
+    # iterations of the concatenated dataflow graph in flight at once in
+    # ``run(steps=k)`` (paper §4).  1 = barriered per-iteration execution.
+    # Depths > 1 overlap frozen-model (ref/reward) inference and parameter
+    # reallocations of iteration t+1 with iteration t's training tail; the
+    # graph's parameter-version edges still gate every trainable model, so
+    # PPO rollouts are never generated from stale weights (the on-policy
+    # guard).  Algorithms *without* version edges on a sampled model would
+    # lose that guarantee — keep depth 1 there.  With depth > 1 the plan
+    # search and recalibration rank plans on steady-state per-iteration
+    # time over the unrolled graph instead of the cold-start makespan.
+    pipeline_depth: int = 1
 
 
 class RLHFExperiment:
@@ -98,7 +109,9 @@ class RLHFExperiment:
             if search:
                 plan = mcmc_search(self.graph, cluster, self.cost,
                                    iters=exp.search_iters,
-                                   seed=exp.seed).best_plan
+                                   seed=exp.seed,
+                                   pipeline_iters=max(exp.pipeline_depth, 1)
+                                   ).best_plan
             else:
                 plan = heuristic_plan(self.graph, cluster, self.cost)
         self.plan = plan
@@ -113,6 +126,7 @@ class RLHFExperiment:
                 pass
         self.engine = RuntimeEngine(self.graph, self.plan, self.executors,
                                     self.models, cost_model=self.cost,
+                                    pipeline_depth=exp.pipeline_depth,
                                     recalibrate_every=exp.recalibrate_every,
                                     plan_candidates=candidates)
         self.iteration = 0
@@ -226,6 +240,34 @@ class RLHFExperiment:
         if self.ckpt and self.iteration % self.exp.checkpoint_every == 0:
             self.save_checkpoint()
         return out
+
+    def run(self, rng, steps: int) -> list[dict]:
+        """Execute ``steps`` PPO iterations through the pipelined runtime
+        (``ExperimentConfig.pipeline_depth`` iterations in flight; depth 1
+        reproduces the sequential ``run_iteration`` loop bit-for-bit).
+        Returns the per-iteration data pools in order.
+
+        Checkpointing fires at iteration *retirement* — in order, once an
+        iteration's calls all completed.  With ``pipeline_depth > 1`` the
+        next iteration's train steps may already have run when iteration t
+        retires, so a checkpoint snapshots weights at version >= t (the
+        nominal iteration label is approximate).  When checkpointing is
+        configured the engine quiesces running executors before each
+        retirement hook, so the snapshot never races a donating train step
+        and params/opt state are mutually consistent.
+        """
+        rngs = jax.random.split(rng, max(steps, 1))
+
+        def data_for(t):
+            return {"prompts": self.make_prompts(rngs[t])}
+
+        def on_retire(t, pool):
+            self.iteration += 1
+            if self.ckpt and self.iteration % self.exp.checkpoint_every == 0:
+                self.save_checkpoint()
+
+        return self.engine.run(data_for, steps=steps, on_retire=on_retire,
+                               quiesce_on_retire=self.ckpt is not None)
 
     # ---------------------------------------------------------- calibration
     def save_profile(self) -> None:

@@ -189,6 +189,43 @@ def test_cost_model_exact_hit_then_scaled_analytic():
     assert cost.analytic_call_time(_call(TRAIN, cfg), ASG1) != 0.123
 
 
+def test_lookup_mid_tier_interpolates_held_out_point():
+    """CostModel.call_time resolution order: exact hit, then workload-space
+    interpolation over measurements of the *same assignment shape*
+    (ProfileTable.lookup with asg_key), then the analytic fallback.  A
+    held-out workload between two profiled token counts must return the
+    interpolated measured value, while an unmeasured assignment shape of the
+    same call must stay analytic (so candidate assignments never collapse
+    onto one interpolated number during the search)."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    cost = CostModel(cluster, table=ProfileTable(cfg.name, {}))
+    cost.record_measurement(_call(TRAIN, cfg, 2, 16), ASG1, 0.010)
+    cost.record_measurement(_call(TRAIN, cfg, 2, 32), ASG1, 0.020)
+    # held-out point @ 48 tokens, between the profiled 32 and 64
+    held_out = _call(TRAIN, cfg, 2, 24)
+    assert cost.call_time(held_out, ASG1) == pytest.approx(0.015)
+    assert cost.call_time(held_out, ASG1) != cost.analytic_call_time(
+        held_out, ASG1)
+    # same workload, different (unmeasured) assignment shape: analytic
+    asg2 = Assignment(DeviceMesh(0, 1, 0, 1), ParallelStrategy(1, 1, 1, 2))
+    assert cost.call_time(held_out, asg2) == pytest.approx(
+        cost.analytic_call_time(held_out, asg2))
+    # a single measured point is not enough for the mid tier (min_points=2
+    # guards the wild proportional extrapolation)
+    cost2 = CostModel(cluster, table=ProfileTable(cfg.name, {}))
+    cost2.record_measurement(_call(TRAIN, cfg, 2, 16), ASG1, 0.010)
+    probe = _call(TRAIN, cfg, 2, 64)
+    assert cost2.call_time(probe, ASG1) == pytest.approx(
+        cost2.analytic_call_time(probe, ASG1))
+    # ProfileTable.lookup surface: asg_key restriction + min_points
+    t = cost.table
+    assert t.lookup(TRAIN, 2, 24, asg_key=assignment_key(ASG1)) == \
+        pytest.approx(0.015)
+    assert t.lookup(TRAIN, 2, 24, asg_key="n9x9:bogus", min_points=2) is None
+    assert t.lookup(TRAIN, 2, 24, min_points=3) is None  # grid has 2 points
+
+
 def test_record_measurement_and_refit():
     cfg = ARCHS["qwen2-0.5b"].reduced()
     cluster = Cluster(1, 1, chip=CPU)
