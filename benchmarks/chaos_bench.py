@@ -1,0 +1,357 @@
+"""Chaos benchmark: kill a host mid-iteration and measure recovery.
+
+Runs a PPO-shaped toy graph on a 2-node x 2-device logical cluster (4 forced
+host devices, so reshards are genuine multi-device collectives) with a
+deterministic ``FaultInjector`` killing node 1 in the middle of an
+iteration, and measures the two recovery paths of the elastic runtime:
+
+  live        — the actor generates data-parallel on the full mesh, so a
+                complete replica survives the loss: recovery = replan on the
+                survivor topology + live weight reshard through
+                ``parallel/realloc_exec`` (no disk touched)
+  checkpoint  — the actor is pinned entirely to the killed node, so every
+                replica dies: recovery falls back to ``CheckpointManager``
+                restore of the last retired step, then reshards onto the
+                survivor plan
+
+Both scenarios replay only the calls that had not completed (carried
+done-set), and the benchmark asserts the post-recovery weights are
+bit-identical to an uninterrupted run of the same length — the train
+updates are order-sensitive, so this checks exactly-once TRAIN semantics,
+not just convergence.  The live path runs at pipeline depth 1 and 2; the
+checkpoint path at depth 1 (a retirement-time snapshot is only exact when
+no later train step may already have run).
+
+Reported recovery times come from ``engine.recoveries[0]`` (replan +
+restore + reshard + bookkeeping, measured inside the engine).  Wired into
+``benchmarks/run.py`` as ``--only chaos``; CI runs ``--smoke --json`` and
+uploads ``chaos_bench.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+DEVS_PER_NODE = 2
+N_NODES = 2
+
+
+def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
+    """Build (dfg, plan, models, sharding_for, executors, replanner).
+
+    Deterministic, placement-independent train updates (x -> x*0.5 + r):
+    final weights are an exact function of the retired call sequence, so
+    comparing against an uninterrupted run is a strict replay check.
+    ``actor_on="full"`` generates dp=4 on the full mesh (a replica survives
+    any single-host loss); ``actor_on="node1"`` pins the actor to node 1
+    (the node the injector kills) so every replica dies.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core.dfg import (DataflowGraph, FunctionCall, GENERATE,
+                                INFERENCE, TRAIN, Workload)
+    from repro.core.plan import (Assignment, Cluster, DeviceMesh,
+                                 ExecutionPlan, ParallelStrategy)
+    from repro.core.runtime import ModelState
+
+    cluster = Cluster(n_nodes=N_NODES, devs_per_node=DEVS_PER_NODE)
+    w = Workload(batch=4, prompt_len=8, gen_len=8)
+    calls = [
+        FunctionCall("gen", "actor", GENERATE, None, w,
+                     ("prompts",), ("seq",), trainable=True),
+        FunctionCall("rew", "reward", INFERENCE, None, w,
+                     ("seq",), ("r",)),
+        FunctionCall("atrain", "actor", TRAIN, None, w,
+                     ("r",), ("a_out",), trainable=True),
+        FunctionCall("ctrain", "critic", TRAIN, None, w,
+                     ("r",), ("c_out",), trainable=True),
+    ]
+    dfg = DataflowGraph(calls, "chaos-toy")
+    node0 = DeviceMesh(0, 1, 0, DEVS_PER_NODE)
+    node1 = DeviceMesh(1, 1, 0, DEVS_PER_NODE)
+    full = cluster.full_mesh()
+    if actor_on == "full":
+        gen_asg = Assignment(full, ParallelStrategy(full.size, 1, 1, 1))
+        atrain_asg = Assignment(node0, ParallelStrategy(1, DEVS_PER_NODE,
+                                                        1, 1))
+    else:  # pinned to the doomed node: checkpoint-fallback scenario
+        gen_asg = Assignment(node1, ParallelStrategy(DEVS_PER_NODE, 1, 1, 1))
+        atrain_asg = Assignment(node1, ParallelStrategy(1, DEVS_PER_NODE,
+                                                        1, 1))
+    plan = ExecutionPlan({
+        "gen": gen_asg,
+        "rew": Assignment(node1, ParallelStrategy(DEVS_PER_NODE, 1, 1, 1)),
+        "atrain": atrain_asg,
+        "ctrain": Assignment(node0, ParallelStrategy(DEVS_PER_NODE, 1, 1, 1)),
+    }, cluster)
+
+    # logical device id -> physical jax device.  The replanner trims this
+    # when a node dies, so post-recovery shardings land on the survivors.
+    devs = list(jax.devices())
+    multi = len(devs) >= N_NODES * DEVS_PER_NODE
+    state = {"phys": devs[:N_NODES * DEVS_PER_NODE] if multi else devs}
+    single = NamedSharding(Mesh(np.array(devs[:1]), ("x",)), P())
+
+    def sharding_for(model_name, asg):
+        if model_name not in ("actor", "critic"):
+            return None
+        if not multi:  # degraded in-process fallback: pure aliases
+            return {f"w{i}": single for i in range(n_leaves)}
+        ids = sorted(asg.mesh.devices(DEVS_PER_NODE))
+        mesh = Mesh(np.array([state["phys"][d] for d in ids]), ("x",))
+        spec = (P("x", None) if asg.strategy.tp > 1
+                and dim % asg.strategy.tp == 0 else P())
+        sh = NamedSharding(mesh, spec)
+        return {f"w{i}": sh for i in range(n_leaves)}
+
+    def replanner(new_cluster, event):
+        if event.kind == "loss" and multi:
+            dead = {d for n in event.nodes
+                    for d in range(n * DEVS_PER_NODE,
+                                   (n + 1) * DEVS_PER_NODE)}
+            state["phys"] = [p for i, p in enumerate(state["phys"])
+                             if i not in dead]
+        nfull = new_cluster.full_mesh()
+        n = nfull.size
+        dp = Assignment(nfull, ParallelStrategy(n, 1, 1, 1))
+        tp = Assignment(nfull, ParallelStrategy(1, n, 1, 1))
+        return ExecutionPlan({"gen": dp, "rew": dp, "atrain": tp,
+                              "ctrain": dp}, new_cluster)
+
+    models = {
+        "actor": ModelState({f"w{i}": jnp.full((dim, dim), float(i + 1),
+                                               jnp.float32)
+                             for i in range(n_leaves)}),
+        "reward": ModelState({}),
+        "critic": ModelState({f"w{i}": jnp.full((dim, dim), 2.0,
+                                                jnp.float32)
+                              for i in range(n_leaves)}),
+    }
+
+    def gen(ms, inputs):
+        time.sleep(sleep_s)
+        return {"seq": inputs["prompts"]}
+
+    def rew(ms, inputs):
+        time.sleep(sleep_s)
+        return {"r": 2 * inputs["seq"] + 1}
+
+    def mk_train(out_key):
+        def train(ms, inputs):
+            import jax as _jax
+            time.sleep(sleep_s)
+            r = float(inputs["r"])
+            ms.params = _jax.tree.map(lambda x: x * 0.5 + r, ms.params)
+            return {out_key: r}
+        return train
+
+    executors = {"gen": gen, "rew": rew, "atrain": mk_train("a_out"),
+                 "ctrain": mk_train("c_out")}
+    return dfg, plan, models, sharding_for, executors, replanner
+
+
+def _leaves(ms):
+    import jax
+    import numpy as np
+    return [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(ms.params)]
+
+
+def _reference(steps, **kw):
+    from repro.core.runtime import RuntimeEngine
+    dfg, plan, models, sharding_for, executors, _rp = _toy(**kw)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for)
+    eng.run(lambda t: {"prompts": t}, steps=steps)
+    return _leaves(models["actor"]), _leaves(models["critic"])
+
+
+def _identical(models, ref):
+    import numpy as np
+    ref_a, ref_c = ref
+    got_a, got_c = _leaves(models["actor"]), _leaves(models["critic"])
+    return (all(np.array_equal(g, w) for g, w in zip(got_a, ref_a))
+            and all(np.array_equal(g, w) for g, w in zip(got_c, ref_c)))
+
+
+def _run_scenario(*, mode, depth, steps, kill_iter, dim, n_leaves, sleep_s,
+                  ckpt_dir=None):
+    """Kill node 1 at ``rew@kill_iter``, recover, and report the engine's
+    recovery record plus the bit-identity verdict."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import fault as FLT
+    from repro.core.runtime import RuntimeEngine
+
+    kw = {"actor_on": "full" if mode == "live" else "node1",
+          "dim": dim, "n_leaves": n_leaves, "sleep_s": sleep_s}
+    ref = _reference(steps, **kw)
+    dfg, plan, models, sharding_for, executors, replanner = _toy(**kw)
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew",
+                                        at_iteration=kill_iter)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        replanner=replanner)
+    on_retire = None
+    if mode == "checkpoint":
+        ckpt = CheckpointManager(ckpt_dir, keep=3)
+
+        def on_retire(t, pool):
+            ckpt.save(t, {"actor": models["actor"].params,
+                          "critic": models["critic"].params})
+
+        def restore(lost):
+            ckpt.wait()
+            _s, trees, _x = ckpt.restore(
+                {n: models[n].params for n in lost})
+            for n in lost:
+                models[n].params = trees[n]
+
+        eng.restore_models = restore
+    t0 = time.monotonic()
+    eng.run(lambda t: {"prompts": t}, steps=steps,
+            pipeline_depth=depth, on_retire=on_retire)
+    wall_s = time.monotonic() - t0
+    assert len(eng.recoveries) == 1, eng.recoveries
+    rec = dict(eng.recoveries[0])
+    assert rec["mode"] == mode, (mode, rec)
+    return {
+        "mode": rec["mode"],
+        "pipeline_depth": depth,
+        "killed_at": f"rew@{kill_iter}",
+        "recovery_s": rec["total_s"],
+        "replan_s": rec["replan_s"],
+        "restore_s": rec["restore_s"],
+        "reshard_s": rec["reshard_s"],
+        "moved_bytes": rec["moved_bytes"],
+        "lost_models": rec["lost_models"],
+        "surviving_devices": rec["surviving_devices"],
+        "resumed_iteration": rec["resumed_iteration"],
+        "bit_identical": _identical(models, ref),
+        "run_wall_s": wall_s,
+    }
+
+
+def bench_chaos(steps=6, kill_iter=2, dim=512, n_leaves=8, sleep_s=0.01,
+                work_dir=None):
+    """Returns (csv_rows, json_summary)."""
+    import jax
+    # warm-up: the first reshard of a given shape pays JAX dispatch/compile
+    # warm-up that would otherwise be billed to whichever scenario runs
+    # first; run one throwaway recovery so the measured ones are warm-vs-warm
+    _run_scenario(mode="live", depth=1, steps=3, kill_iter=1, dim=dim,
+                  n_leaves=n_leaves, sleep_s=0.0)
+    if work_dir is None:
+        work_dir = tempfile.mkdtemp(prefix="chaos_bench_")
+    scenarios = {
+        "live_d1": dict(mode="live", depth=1),
+        "live_d2": dict(mode="live", depth=2),
+        "checkpoint_d1": dict(mode="checkpoint", depth=1,
+                              ckpt_dir=os.path.join(work_dir,
+                                                    "chaos_ckpt")),
+    }
+    results = {}
+    for name, sc in scenarios.items():
+        results[name] = _run_scenario(steps=steps, kill_iter=kill_iter,
+                                      dim=dim, n_leaves=n_leaves,
+                                      sleep_s=sleep_s, **sc)
+    live_s = results["live_d1"]["recovery_s"]
+    ckpt_s = results["checkpoint_d1"]["recovery_s"]
+    summary = {
+        "workload": {"steps": steps, "kill_iter": kill_iter, "dim": dim,
+                     "n_leaves": n_leaves, "sleep_s": sleep_s,
+                     "devices": len(jax.devices()),
+                     "param_bytes_per_model": n_leaves * dim * dim * 4},
+        **results,
+        "live_vs_checkpoint_speedup": ckpt_s / max(live_s, 1e-9),
+        "all_bit_identical": all(r["bit_identical"]
+                                 for r in results.values()),
+    }
+    rows = []
+    for name in ("live_d1", "live_d2", "checkpoint_d1"):
+        r = results[name]
+        rows.append((f"chaos/{name}", r["recovery_s"] * 1e6,
+                     f"restore_s={r['restore_s']:.4f};"
+                     f"reshard_s={r['reshard_s']:.4f};"
+                     f"moved={r['moved_bytes']};"
+                     f"identical={r['bit_identical']}"))
+    rows.append(("chaos/live_vs_checkpoint", 0.0,
+                 f"speedup={summary['live_vs_checkpoint_speedup']:.2f}x"))
+    rows.append(("chaos/bit_identical", 0.0,
+                 f"all={summary['all_bit_identical']}"))
+    return rows, summary
+
+
+def _spawn(args_list, json_path, n_devices=N_NODES * DEVS_PER_NODE):
+    """Re-exec the core in a subprocess with forced host devices so the
+    recovery reshards are real multi-device collectives."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("PYTHONPATH", "")
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here, env["PYTHONPATH"]])
+    cmd = [sys.executable, "-m", "benchmarks.chaos_bench", "--core"]
+    cmd += args_list
+    if json_path:
+        cmd += ["--json", json_path]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=600, cwd=here)
+    if r.returncode != 0:
+        return None
+    rows = []
+    for line in r.stdout.splitlines():
+        parts = line.strip().split(",")
+        if len(parts) == 3 and parts[0].startswith("chaos/"):
+            rows.append((parts[0], float(parts[1]), parts[2]))
+    return rows or None
+
+
+def run(smoke: bool = False, json_path: str | None = None):
+    """Entry point for ``benchmarks.run --only chaos``."""
+    args_list = ["--smoke"] if smoke else []
+    rows = _spawn(args_list, json_path)
+    if rows is not None:
+        return rows
+    # fallback: in-process (degraded: single-device reshards are aliases)
+    rows, summary = bench_chaos(
+        **({"steps": 4, "dim": 256, "sleep_s": 0.005} if smoke else {}))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--core", action="store_true",
+                    help="run the measurement in this process (set by the "
+                         "spawning parent after forcing host devices)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-friendly: fewer steps, smaller weights")
+    ap.add_argument("--json", default=None,
+                    help="write the summary dict to this path")
+    args = ap.parse_args()
+
+    from benchmarks.common import emit
+    kw = {"steps": 4, "dim": 256, "sleep_s": 0.005} if args.smoke else {}
+    if args.core:
+        rows, summary = bench_chaos(**kw)
+        emit(rows)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2)
+        return
+    rows = run(smoke=args.smoke, json_path=args.json)
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

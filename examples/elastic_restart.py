@@ -1,6 +1,16 @@
-"""Elastic scaling / failure recovery demo: train, checkpoint, then restart
-on a *different* cluster shape — the plan is re-searched and parameters are
-restored + resharded through the reallocation executor (DESIGN.md §6).
+"""Elastic fault tolerance demo: survive a host loss *mid-run*, without a
+restart, then grow the cluster back and replan.
+
+A deterministic ``FaultInjector`` kills simulated host 1 in the middle of
+the second PPO iteration.  The runtime reacts in-run (docs/ARCHITECTURE.md,
+"Fault tolerance & elasticity"): it drains the in-flight window, masks the
+dead host out, re-searches a plan for the surviving cluster
+(``search.replan_on_topology``, seeded with the old plan's projection),
+recovers weights — live reshard when a data-parallel replica survived,
+checkpoint restore otherwise — and resumes from the last retired
+iteration, replaying only the calls that had not completed.  Afterwards
+``add_hosts`` declares a host *gain*, consumed at the next retirement: the
+mesh grows and the plan is re-searched onto it.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -10,7 +20,7 @@ import tempfile
 import jax
 
 from repro.configs import ARCHS
-from repro.checkpoint.manager import CheckpointManager
+from repro.core.fault import FaultInjector
 from repro.core.plan import Cluster
 from repro.rlhf.experiment import ExperimentConfig, RLHFExperiment
 from repro.rlhf.ppo import PPOHyperparameters
@@ -18,36 +28,47 @@ from repro.rlhf.ppo import PPOHyperparameters
 
 def main():
     actor = ARCHS["qwen2-0.5b"].reduced()
+    ckpt_dir = tempfile.mkdtemp(prefix="elastic_")
     exp_cfg = ExperimentConfig(batch=4, prompt_len=8, gen_len=8,
-                               search_iters=50,
+                               search_iters=50, replan_iters=40,
+                               checkpoint_every=1, checkpoint_dir=ckpt_dir,
                                ppo=PPOHyperparameters(n_minibatches=2))
 
-    # phase 1: "16-GPU" cluster (simulated topology; CPU devices execute)
-    c1 = Cluster(n_nodes=2, devs_per_node=8)
-    exp = RLHFExperiment(actor, actor, c1, exp_cfg)
-    print("phase 1 plan (2x8 cluster):")
+    # chaos script: host 1 dies while reward inference of iteration 1 is
+    # executing — deterministic, so every run of this demo is identical
+    inj = FaultInjector().kill_host(1, at_call="reward_inf", at_iteration=1)
+
+    cluster = Cluster(n_nodes=2, devs_per_node=8)
+    exp = RLHFExperiment(actor, actor, cluster, exp_cfg,
+                         fault_injector=inj)
+    print("initial plan (2x8 cluster):")
     print(exp.plan)
-    exp.run_iteration(jax.random.PRNGKey(0))
 
-    ckpt_dir = tempfile.mkdtemp(prefix="elastic_")
-    mgr = CheckpointManager(ckpt_dir)
-    mgr.save(1, {"actor": exp.models["actor"].params,
-                 "actor_opt": exp.models["actor"].opt_state})
-    print(f"checkpointed to {ckpt_dir}")
+    # the kill fires inside run(); recovery happens in-run — no restart,
+    # no new process, the same engine object carries on
+    out = exp.run(jax.random.PRNGKey(0), steps=3)
+    rec = exp.engine.recoveries[0]
+    print(f"\nhost 1 died at reward_inf@1 -> recovered in "
+          f"{rec['total_s']:.3f}s "
+          f"(mode={rec['mode']}, replan {rec['replan_s']:.3f}s, "
+          f"restore {rec['restore_s']:.3f}s)")
+    print(f"lost models (checkpoint-restored): {rec['lost_models'] or '—'}; "
+          f"resumed from iteration {rec['resumed_iteration']}")
+    print(f"\nplan after the loss ({exp.cluster.n_nodes}x"
+          f"{exp.cluster.devs_per_node} survivors):")
+    print(exp.plan)
+    print(f"completed {len(out)} iterations; last actor_loss="
+          f"{out[-1]['actor_stats']['loss']:+.4f}")
 
-    # phase 2: a node "failed" — restart on 1x8, re-search, restore, continue
-    c2 = Cluster(n_nodes=1, devs_per_node=8)
-    exp2 = RLHFExperiment(actor, actor, c2, exp_cfg)
-    print("\nphase 2 plan after losing a node (1x8 cluster):")
-    print(exp2.plan)
-    step, restored, _ = mgr.restore({
-        "actor": exp2.models["actor"].params,
-        "actor_opt": exp2.models["actor"].opt_state})
-    exp2.models["actor"].params = restored["actor"]
-    exp2.models["actor"].opt_state = restored["actor_opt"]
-    out = exp2.run_iteration(jax.random.PRNGKey(1))
-    print(f"\nresumed at step {step} on the smaller cluster; "
-          f"actor_loss={out['actor_stats']['loss']:+.4f} — elastic restart OK")
+    # elasticity the other way: a host joins; the gain is consumed at the
+    # next iteration retirement (mesh grows, plan re-searched)
+    exp.engine.add_hosts(1)
+    exp.run(jax.random.PRNGKey(1), steps=2)
+    print(f"\nafter add_hosts(1): plan on {exp.cluster.n_nodes}x"
+          f"{exp.cluster.devs_per_node}")
+    print(exp.plan)
+    ev = [f"{e.kind}{list(e.nodes)}" for e in exp.engine.topology_events]
+    print(f"topology events: {', '.join(ev)} — elastic recovery OK")
 
 
 if __name__ == "__main__":

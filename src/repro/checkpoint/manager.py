@@ -111,13 +111,41 @@ class CheckpointManager:
         return sorted(int(p.name.split("_")[1]) for p in self.root.iterdir()
                       if p.is_dir() and p.name.startswith("step_"))
 
+    def valid_step(self, step: int) -> bool:
+        """Torn-write detection: a step is restorable only if its manifest
+        parses and every referenced .npy exists with at least the payload
+        size the manifest promises (a crash mid-write leaves a truncated
+        file; the .npy header adds bytes on top of the raw data, so
+        ``st_size >= payload`` is a safe lower bound)."""
+        d = self.root / f"step_{step:09d}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, ValueError):
+            return False
+        try:
+            for keys in manifest.get("models", {}).values():
+                for meta in keys.values():
+                    f = d / meta["file"]
+                    expect = int(np.prod(meta["shape"])) * \
+                        np.dtype(meta["dtype"]).itemsize
+                    if not f.is_file() or f.stat().st_size < expect:
+                        return False
+        except (OSError, KeyError, TypeError, ValueError):
+            return False
+        return True
+
+    def valid_steps(self) -> list[int]:
+        return [s for s in self.list_steps() if self.valid_step(s)]
+
     def latest_step(self) -> Optional[int]:
         ptr = self.root / "LATEST"
         if ptr.exists():
             s = int(ptr.read_text().strip())
-            if (self.root / f"step_{s:09d}" / "manifest.json").exists():
+            if self.valid_step(s):
                 return s
-        steps = self.list_steps()
+        # LATEST missing, stale, or pointing at a torn write: fall back to
+        # the newest step that validates
+        steps = self.valid_steps()
         return steps[-1] if steps else None
 
     def restore(self, template: dict[str, Any], step: Optional[int] = None,
@@ -125,10 +153,32 @@ class CheckpointManager:
                 ) -> tuple[int, dict[str, Any], dict]:
         """Restore named pytrees.  ``template`` provides tree structure;
         ``shardings`` (optional, same structure) places each leaf — restoring
-        into a different mesh/plan reshards transparently."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        into a different mesh/plan reshards transparently.
+
+        With ``step=None``, candidate steps are tried newest-first and a
+        partial/corrupt checkpoint (torn write the validation missed) is
+        skipped in favour of the previous one; an explicitly requested
+        ``step`` raises instead of silently restoring something else."""
+        if step is not None:
+            return self._restore_step(template, step, shardings)
+        candidates = self.valid_steps()
+        latest = self.latest_step()
+        if latest is not None and latest in candidates:
+            # honour the pointer first, then walk backwards
+            candidates = [s for s in candidates if s != latest] + [latest]
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._restore_step(template, s, shardings)
+            except (OSError, KeyError, ValueError) as err:
+                last_err = err
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {self.root}"
+            + (f" (last error: {last_err})" if last_err else ""))
+
+    def _restore_step(self, template: dict[str, Any], step: int,
+                      shardings: Optional[dict[str, Any]] = None
+                      ) -> tuple[int, dict[str, Any], dict]:
         d = self.root / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
         out = {}

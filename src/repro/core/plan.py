@@ -39,6 +39,13 @@ class DeviceMesh:
             for n in range(self.node_start, self.node_start + self.node_count)
             for d in range(self.dev_start, self.dev_start + self.dev_count))
 
+    def fits(self, cluster: "Cluster") -> bool:
+        """True when this rectangle lies inside ``cluster`` — the test that
+        decides, after an elastic resize, whether an assignment can be kept
+        verbatim (its parameters need not move at all)."""
+        return (self.node_start + self.node_count <= cluster.n_nodes
+                and self.dev_start + self.dev_count <= cluster.devs_per_node)
+
     def overlaps(self, other: "DeviceMesh") -> bool:
         if (self.node_start + self.node_count <= other.node_start or
                 other.node_start + other.node_count <= self.node_start):

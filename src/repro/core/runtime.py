@@ -45,12 +45,30 @@ dispatches only the sub-tree of leaves whose layout changes, and the moved
 bytes plus the measured transfer time of each ``ReshardTask`` are folded
 into the cost model's reallocation term (``CostModel.record_realloc``).
 
-Fault-tolerance hooks:
-  * per-call deadline = straggler_factor x estimator time; breaches invoke
-    ``on_straggler`` (default: log + re-dispatch once)
+Fault tolerance & elasticity (core/fault.py + docs/ARCHITECTURE.md):
+  * transient call failures retry under a configurable ``RetryPolicy``
+    (max attempts, exponential backoff, per-call-type overrides) after
+    dropping any in-flight prefetch — without folding its transfer time
+    into the realloc calibration — and re-reallocating the model's
+    parameters from the last good layout
+  * per-call deadline = straggler-factor x estimator time (the factor comes
+    from the retry policy when set, else the engine default); breaches
+    invoke ``on_straggler``
+  * a ``DeviceLostError`` (host loss) is a *topology change*, not a retry:
+    the window aborts at the next safe point (in-flight executor threads
+    always run to completion so completed work is never re-run), dead
+    devices are masked out of the mesh via ``DeviceHealth.compact()``, the
+    caller-supplied ``replanner`` searches a plan for the surviving
+    cluster, live weights reshard onto it through ``parallel/realloc_exec``
+    whenever any data-parallel replica of a model survives intact
+    (``restore_models`` — checkpoint restore — is the fallback when every
+    replica died), and ``run()`` resumes from the last retired iteration,
+    replaying only the calls that had not completed (the carried done-set
+    keeps TRAIN steps exactly-once and the version-edge guard intact)
+  * ``add_hosts(k)`` declares device *gain*; it is consumed at the next
+    iteration retirement: the mesh grows and the replanner produces the
+    expanded plan, weights resharding lazily on each model's next call
   * ``checkpoint_every`` saves model states through a CheckpointManager
-  * a failed call (exception) is retried once after reallocating its model's
-    parameters from the last good location
 
 Closed-loop calibration (paper §5.1 + docs/CALIBRATION.md): with
 ``recalibrate_every=N`` the engine folds its own CallRecords back into the
@@ -67,10 +85,16 @@ import dataclasses
 import time
 from typing import Any, Callable, Optional
 
+from repro.core import fault
 from repro.core.dfg import (DataflowGraph, FunctionCall, TRAIN, base_name,
                             iteration_of, unroll_iterations)
 from repro.core.estimator import CostModel
 from repro.core.plan import Assignment, ExecutionPlan
+
+
+class _Aborted(Exception):
+    """Internal: a call gave up because a device-loss fault is in flight
+    elsewhere in the window.  Never escapes the engine."""
 
 
 def _silent_wait(task):
@@ -108,6 +132,7 @@ class CallRecord:
     iteration: int = 0
     realloc_bytes: int = 0  # bytes actually moved by the partial reshard
     prefetch_cross: bool = False  # hit on a prefetch spanning iterations
+    attempts: int = 1  # executions including retries (retried == attempts > 1)
 
 
 class RuntimeEngine:
@@ -121,7 +146,13 @@ class RuntimeEngine:
                  pipeline_depth: int = 1,
                  recalibrate_every: int = 0,
                  plan_candidates: Optional[list[ExecutionPlan]] = None,
-                 on_recalibrate: Optional[Callable] = None):
+                 on_recalibrate: Optional[Callable] = None,
+                 retry_policy: Optional[fault.RetryPolicy] = None,
+                 fault_injector: Optional[fault.FaultInjector] = None,
+                 health: Optional[fault.DeviceHealth] = None,
+                 replanner: Optional[Callable] = None,
+                 restore_models: Optional[Callable] = None,
+                 max_recoveries: int = 8):
         """``executors[name](model_state, inputs: dict) -> dict`` runs one
         call; TRAIN executors mutate model_state.params/opt_state in place.
         ``sharding_for(model_name, assignment)`` -> dst sharding tree (or
@@ -141,6 +172,16 @@ class RuntimeEngine:
         current plan is re-ranked against ``plan_candidates`` under the
         refitted estimates, and ``replan()`` fires when the predicted
         ranking flips.  ``on_recalibrate(n, switched)`` observes each pass.
+
+        Elastic fault tolerance: ``retry_policy`` governs transient-failure
+        retries (default reproduces the historical single retry);
+        ``fault_injector`` (chaos testing) fires inside each call's
+        executor thread; ``replanner(surviving_cluster, event) ->
+        ExecutionPlan`` is consulted on topology changes (device loss or
+        ``add_hosts`` gain) — without one, a ``DeviceLostError`` is fatal;
+        ``restore_models(lost_names)`` restores models whose every replica
+        died (checkpoint fallback); ``max_recoveries`` bounds recovery
+        attempts per ``run()``.
         """
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
@@ -157,6 +198,19 @@ class RuntimeEngine:
         self.recalibrate_every = recalibrate_every
         self.plan_candidates = list(plan_candidates or [])
         self.on_recalibrate = on_recalibrate or (lambda *a: None)
+        self.retry_policy = retry_policy or fault.RetryPolicy()
+        self.fault_injector = fault_injector
+        self.health = health
+        self.replanner = replanner
+        self.restore_models = restore_models
+        self.max_recoveries = max_recoveries
+        self.recoveries: list[dict] = []
+        self.topology_events: list[fault.TopologyEvent] = []
+        self.prefetch_aborted = 0  # drained without folding into the cost model
+        self.aborted_calls = 0
+        self._pending_gain = 0
+        self._fault: Optional[fault.DeviceLostError] = None
+        self._abort_ev: Optional[asyncio.Event] = None
         self.recalibrations = 0
         self.replans = 0
         self.iterations_done = 0
@@ -235,6 +289,65 @@ class RuntimeEngine:
         self.cost.record_realloc(sched.time, task.elapsed_s,
                                  task.moved_bytes)
 
+    async def _drain_prefetch(self, model_name: str, *, fold: bool = False):
+        """Retire a model's in-flight prefetched reallocation under the
+        model lock (so it never races a dispatching prefetch chain).
+
+        The dispatched transfer always runs to completion — its donation
+        already committed ``st.params`` to the new buffers — but with
+        ``fold=False`` its measured time is *excluded* from the cost
+        model's realloc calibration: a transfer drained on the failure or
+        abort path does not represent a planned reallocation hop, and
+        folding it would poison the calibration (satellite: leaked
+        prefetch ReshardTasks)."""
+        lock = self._model_locks.get(model_name)
+        if lock is not None:
+            async with lock:
+                await self._drain_prefetch_inner(model_name, fold)
+        else:
+            await self._drain_prefetch_inner(model_name, fold)
+
+    async def _drain_prefetch_inner(self, model_name: str, fold: bool):
+        st = self.models[model_name]
+        if st.prefetch is None:
+            return
+        target, task, meta = st.prefetch
+        st.prefetch = None
+        waiter = meta.get("waiter")
+        if waiter is not None:
+            try:
+                await waiter
+            except Exception:  # noqa: BLE001 — bookkeeping-only future
+                pass
+        loop = asyncio.get_running_loop()
+        try:
+            await loop.run_in_executor(None, task.wait)
+        except Exception:  # noqa: BLE001 — transfer itself failed
+            st.assignment = None
+            return
+        st.assignment = target
+        if fold:
+            self._fold_realloc(meta.get("sched"), task)
+        else:
+            self.prefetch_aborted += 1
+
+    def _drain_prefetch_sync(self, model_name: str):
+        """Loop-less drain for the recovery path (the event loop is gone;
+        its default executor was joined at shutdown, so the transfer and
+        its waiter thread have already landed)."""
+        st = self.models[model_name]
+        if st.prefetch is None:
+            return
+        target, task, _meta = st.prefetch
+        st.prefetch = None
+        try:
+            task.wait()
+        except Exception:  # noqa: BLE001
+            st.assignment = None
+            return
+        st.assignment = target
+        self.prefetch_aborted += 1
+
     async def _prefetch_for(self, call: FunctionCall, *, cross: bool = False):
         """Dispatch the reallocation for ``call`` ahead of its execution.
 
@@ -288,6 +401,11 @@ class RuntimeEngine:
         for t in range(steps):
             await admitted[t].wait()
             for call in calls:
+                if done[f"{call.name}@{t}"].is_set():
+                    # already completed (replay after a recovery): no
+                    # reallocation to prefetch, fast-forward the chain
+                    prev = (call.name, t)
+                    continue
                 if prev is not None:
                     await done[f"{prev[0]}@{prev[1]}"].wait()
                 try:
@@ -361,26 +479,86 @@ class RuntimeEngine:
             locks.append(self._dev_locks[d])
         return locks
 
+    def _check_abort(self):
+        if self._fault is not None:
+            raise _Aborted()
+
+    def _signal_fault(self, err: BaseException):
+        """First escalating fault wins; wake every dependency waiter so the
+        window drains instead of deadlocking on done-events that will never
+        be set.  Device-loss faults trigger recovery in ``run()``; any
+        other escalated failure surfaces to the caller after the drain."""
+        if self._fault is None:
+            self._fault = err
+        if self._abort_ev is not None:
+            self._abort_ev.set()
+
+    async def _wait_dep(self, ev: asyncio.Event):
+        """Wait on a dependency event, racing the abort signal: a call
+        whose parent died must unblock and stand down, not wait forever."""
+        if ev.is_set():
+            return
+        if self._abort_ev is None:
+            await ev.wait()
+            return
+        self._check_abort()
+        w = asyncio.ensure_future(ev.wait())
+        ab = asyncio.ensure_future(self._abort_ev.wait())
+        try:
+            await asyncio.wait({w, ab},
+                               return_when=asyncio.FIRST_COMPLETED)
+        finally:
+            for f in (w, ab):
+                if not f.done():
+                    f.cancel()
+        if not ev.is_set():
+            raise _Aborted()
+
     async def _run_call(self, call: FunctionCall, t: int,
                         pools: dict[int, dict],
                         done: dict[str, asyncio.Event],
                         intra: dict[str, list[str]],
-                        cross: dict[str, list[str]]):
+                        cross: dict[str, list[str]],
+                        done_keys: Optional[set] = None):
+        try:
+            await self._run_call_inner(call, t, pools, done, intra, cross,
+                                       done_keys)
+        except (_Aborted, asyncio.CancelledError):
+            raise
+        except BaseException as err:
+            # any escalating failure aborts the window: siblings blocked on
+            # this call's done-event must wake and stand down, not hang the
+            # (all-siblings-awaited) iteration gather
+            self._signal_fault(err)
+            raise
+
+    async def _run_call_inner(self, call: FunctionCall, t: int,
+                              pools: dict[int, dict],
+                              done: dict[str, asyncio.Event],
+                              intra: dict[str, list[str]],
+                              cross: dict[str, list[str]],
+                              done_keys: Optional[set] = None):
         for p in intra[call.name]:
-            await done[f"{p}@{t}"].wait()
+            await self._wait_dep(done[f"{p}@{t}"])
         if t > 0:  # version edges into the previous iteration
             for p in cross[call.name]:
-                await done[f"{p}@{t - 1}"].wait()
+                await self._wait_dep(done[f"{p}@{t - 1}"])
         data = pools[t]
         locks = await self._locks_for(call.name)
         for lk in locks:  # deterministic (device-id) order: no deadlock
             await lk.acquire()
         try:
+            self._check_abort()
             realloc_s, prefetch_hit, cross_hit, moved = \
                 await self._maybe_reallocate(call)
+            self._check_abort()
+            policy = self.retry_policy.for_call_type(call.call_type)
+            factor = (policy.straggler_factor
+                      if policy.straggler_factor is not None
+                      else self.straggler_factor)
             deadline = None
             if self.cost is not None:
-                deadline = self.straggler_factor * self.cost.call_time(
+                deadline = factor * self.cost.call_time(
                     call, self._assignment_for(call.name))
             t0 = time.monotonic()
             inputs = {k: data[k] for k in call.inputs if k in data}
@@ -388,25 +566,48 @@ class RuntimeEngine:
 
             fn = self.executors.get(call.name) \
                 or self.executors[base_name(call.name)]
+            abs_iter = self._iter_base + t
+
+            def work():
+                # chaos injection fires in the executor thread, exactly
+                # where a real device fault would surface
+                if self.fault_injector is not None:
+                    self.fault_injector.on_execute(call.name, abs_iter)
+                return fn(self.models[call.model_name], inputs)
 
             async def execute():
                 self._begin_use(call.model_name)
                 try:
-                    return await loop.run_in_executor(
-                        None, lambda: fn(self.models[call.model_name],
-                                         inputs))
+                    return await loop.run_in_executor(None, work)
                 finally:
                     await self._end_use(call.model_name)
 
-            try:
-                out = await execute()
-                retried = False
-            except Exception:  # noqa: BLE001 — single retry after re-realloc
-                self.models[call.model_name].assignment = None
-                self.models[call.model_name].prefetch = None
-                await self._maybe_reallocate(call)
-                out = await execute()
-                retried = True
+            attempts = 0
+            while True:
+                attempts += 1
+                try:
+                    out = await execute()
+                    break
+                except fault.DeviceLostError as err:
+                    # topology change, not a retryable failure: escalate
+                    self.aborted_calls += 1
+                    self._signal_fault(err)
+                    raise
+                except asyncio.CancelledError:
+                    raise
+                except Exception:  # noqa: BLE001 — transient under policy
+                    if attempts >= policy.max_attempts:
+                        raise
+                    self._check_abort()
+                    # drop (never fold) any in-flight prefetch, then force
+                    # a fresh reallocation from the last good layout
+                    await self._drain_prefetch(call.model_name, fold=False)
+                    self.models[call.model_name].assignment = None
+                    backoff = policy.backoff_for(attempts)
+                    if backoff > 0:
+                        await asyncio.sleep(backoff)
+                    await self._maybe_reallocate(call)
+            retried = attempts > 1
             t1 = time.monotonic()
             straggled = deadline is not None and (t1 - t0) > deadline
             if straggled:
@@ -417,11 +618,14 @@ class RuntimeEngine:
             self.records.append(CallRecord(
                 call.name, t0, t1, realloc_s, straggled, retried,
                 prefetch_hit, iteration=self._iter_base + t,
-                realloc_bytes=moved, prefetch_cross=cross_hit))
+                realloc_bytes=moved, prefetch_cross=cross_hit,
+                attempts=attempts))
         finally:
             for lk in reversed(locks):
                 lk.release()
         done[f"{call.name}@{t}"].set()
+        if done_keys is not None:
+            done_keys.add(f"{call.name}@{t}")
 
     # ------------------------------------------------- pipelined scheduling
     def _dependency_template(self) -> tuple[dict, dict]:
@@ -451,20 +655,44 @@ class RuntimeEngine:
 
     async def _run_pipelined(self, steps: int, depth: int, data_for,
                              on_retire, keep_pools: bool,
-                             quiesce_on_retire: bool) -> list:
+                             quiesce_on_retire: bool,
+                             carry: dict, results: list) -> list:
+        """One attempt at the window.  ``carry`` survives recovery attempts
+        within a ``run()``: the retired-iteration count, the per-iteration
+        data pools still in flight, and the set of completed call keys
+        (``name@t``).  On replay after a device-loss recovery, completed
+        calls are skipped — their outputs are already in the carried pools
+        — so TRAIN steps apply exactly once and rollouts are never
+        regenerated from advanced weights."""
         intra, cross = self._dependency_template()
         done: dict[str, asyncio.Event] = {}
-        pools: dict[int, dict] = {}
-        results: list = [None] * steps
+        pools: dict[int, dict] = carry["pools"]
+        done_keys: set = carry["done"]
+        start = carry["retired"]
         admitted = [asyncio.Event() for _ in range(steps)]
         retire_cond = asyncio.Condition()
-        state = {"retired": 0, "failed": False}
+        state = {"retired": start, "failed": False}
+        self._fault = None
+        self._abort_ev = asyncio.Event()
 
         async def run_iter(t: int):
             try:
-                await asyncio.gather(*(
-                    self._run_call(c, t, pools, done, intra, cross)
-                    for c in self.dfg.calls))
+                res = await asyncio.gather(*(
+                    self._run_call(c, t, pools, done, intra, cross,
+                                   done_keys)
+                    for c in self.dfg.calls
+                    if f"{c.name}@{t}" not in done_keys),
+                    return_exceptions=True)
+                # return_exceptions: every sibling call coroutine has
+                # finished (completed, failed, or stood down) before the
+                # iteration concludes — nothing runs detached into a
+                # recovery, so weights never move under a live executor
+                errs = [r for r in res if isinstance(r, BaseException)]
+                real = [e for e in errs if not isinstance(e, _Aborted)]
+                if real:
+                    raise real[0]
+                if errs:
+                    raise errs[0]
                 # retire strictly in iteration order: pools hand back, then
                 # checkpoint/recalibration observe a consistent prefix
                 async with retire_cond:
@@ -491,9 +719,15 @@ class RuntimeEngine:
                             and len(self.records) - self._recorded_upto
                             >= self.recalibrate_every):
                         self.recalibrate()
+                    if self._pending_gain and self.replanner is not None:
+                        # device gain is consumed at retirement: grow the
+                        # mesh and replan; weights reshard lazily on each
+                        # model's next call
+                        self._apply_gain()
                     state["retired"] = t + 1
+                    carry["retired"] = t + 1
                     retire_cond.notify_all()
-            except Exception:
+            except BaseException:
                 # wake the admission loop and sibling retirements so the
                 # failure propagates instead of deadlocking the window
                 async with retire_cond:
@@ -510,6 +744,16 @@ class RuntimeEngine:
         iter_tasks: list[asyncio.Task] = []
         try:
             for t in range(steps):
+                if t < start:
+                    # retired in a previous attempt: materialize its done
+                    # events pre-set so carried version edges and prefetch
+                    # chains resolve instantly
+                    for c in self.dfg.calls:
+                        ev = asyncio.Event()
+                        ev.set()
+                        done[f"{c.name}@{t}"] = ev
+                    admitted[t].set()
+                    continue
                 # sliding window: admit t once t - depth has retired
                 async with retire_cond:
                     await retire_cond.wait_for(
@@ -517,12 +761,23 @@ class RuntimeEngine:
                         or state["retired"] >= t - (depth - 1))
                     if state["failed"]:
                         break
-                pools[t] = dict(data_for(t))
+                if t not in pools:
+                    pools[t] = dict(data_for(t))
                 for c in self.dfg.calls:
-                    done[f"{c.name}@{t}"] = asyncio.Event()
+                    ev = asyncio.Event()
+                    if f"{c.name}@{t}" in done_keys:
+                        ev.set()
+                    done[f"{c.name}@{t}"] = ev
                 admitted[t].set()
                 iter_tasks.append(asyncio.create_task(run_iter(t)))
-            await asyncio.gather(*iter_tasks)
+            res = await asyncio.gather(*iter_tasks, return_exceptions=True)
+            if self._fault is not None:
+                raise self._fault
+            real = [r for r in res if isinstance(r, BaseException)
+                    and not isinstance(r, (_Aborted,
+                                           asyncio.CancelledError))]
+            if real:
+                raise real[0]
         finally:
             for tk in prefetchers:
                 tk.cancel()
@@ -531,6 +786,12 @@ class RuntimeEngine:
                     tk.cancel()
             await asyncio.gather(*prefetchers, *iter_tasks,
                                  return_exceptions=True)
+            if self._fault is not None:
+                # abort path: drain every in-flight prefetch now, while
+                # the loop's executor is still alive, and keep their
+                # transfer times out of the realloc calibration
+                for name in self.models:
+                    await self._drain_prefetch(name, fold=False)
         return results
 
     def run(self, initial_data, steps: int = 1, *,
@@ -575,14 +836,26 @@ class RuntimeEngine:
         else:
             template = initial_data
             data_for = lambda t: template  # noqa: E731 — copied by the runner
-        self._dev_locks = {}  # locks bind to the event loop of each run
-        self._model_locks = {m: asyncio.Lock() for m in self.models}
-        self._model_users = {m: 0 for m in self.models}
-        self._model_idle = {}
-        self._iter_base = self.iterations_done
-        return asyncio.run(
-            self._run_pipelined(steps, depth, data_for, on_retire,
-                                keep_pools, quiesce_on_retire))
+        carry = {"pools": {}, "done": set(), "retired": 0}
+        results: list = [None] * steps
+        base = self.iterations_done  # anchor: stable across recovery attempts
+        attempts = 0
+        while True:
+            self._dev_locks = {}  # locks bind to the event loop of each run
+            self._model_locks = {m: asyncio.Lock() for m in self.models}
+            self._model_users = {m: 0 for m in self.models}
+            self._model_idle = {}
+            self._iter_base = base
+            try:
+                return asyncio.run(
+                    self._run_pipelined(steps, depth, data_for, on_retire,
+                                        keep_pools, quiesce_on_retire,
+                                        carry, results))
+            except fault.DeviceLostError as err:
+                attempts += 1
+                if self.replanner is None or attempts > self.max_recoveries:
+                    raise
+                self._recover(err, carry["retired"])
 
     def run_iteration(self, initial_data: dict) -> dict:
         """Execute one full dataflow-graph iteration (barriered: the event
@@ -660,6 +933,119 @@ class RuntimeEngine:
         self.plan = new_plan
         self._rebuild_mesh_devs()
 
+    def add_hosts(self, k: int = 1):
+        """Declare ``k`` new hosts joining the cluster.  Consumed at the
+        next iteration retirement (the only point where no iteration
+        boundary is straddled): the mesh grows via ``DeviceHealth`` and the
+        ``replanner`` produces the expanded plan."""
+        if k < 1:
+            raise ValueError("add_hosts needs k >= 1")
+        self._pending_gain += k
+
+    def _apply_gain(self):
+        k, self._pending_gain = self._pending_gain, 0
+        if self.health is None:
+            self.health = fault.DeviceHealth(self.plan.cluster)
+        event = self.health.gain_hosts(k)
+        grown, _node_map = self.health.compact()
+        new_plan = self.replanner(grown, event)
+        self.replan(new_plan)
+        self.topology_events.append(event)
+
+    def _recover(self, err: fault.DeviceLostError, resumed_iteration: int):
+        """React to a host loss: mask the dead devices, replan on the
+        surviving topology, and recover weights — live reshard through
+        ``parallel/realloc_exec`` when any data-parallel replica of a model
+        survives intact, checkpoint restore (``restore_models``) as the
+        fallback.  Runs between event loops; the previous loop's executor
+        threads were joined at shutdown, so no call is in flight.
+
+        (This is a simulated fleet: a dead host's buffers still physically
+        exist in host RAM, so "lost" is the *logical* determination the
+        replica analysis makes — exactly the one a real deployment faces.)
+        """
+        t_start = time.monotonic()
+        if not err.nodes:
+            raise err  # nothing to mask — unattributable loss is fatal
+        if self.health is None:
+            self.health = fault.DeviceHealth(self.plan.cluster)
+        for n in err.nodes:
+            if n not in self.health.dead_nodes:
+                self.health.mark_host_dead(n)
+        event = fault.TopologyEvent("loss", tuple(err.nodes),
+                                    at=time.monotonic())
+        dead = self.health.dead_devices()
+        m = self.plan.cluster.devs_per_node
+        import jax
+        lost = []
+        for name, st in self.models.items():
+            if not jax.tree.leaves(st.params):
+                continue  # paramless model: nothing to recover
+            self._drain_prefetch_sync(name)  # belt-and-braces; see finally
+            asg = st.assignment
+            if asg is None or not (asg.mesh.devices(m) & dead):
+                continue  # never materialized, or untouched by the loss
+            if not fault.has_live_replica(asg, dead, m):
+                lost.append(name)
+        surviving, _node_map = self.health.compact()
+        t0 = time.monotonic()
+        new_plan = self.replanner(surviving, event)
+        replan_s = time.monotonic() - t0
+        self.replan(new_plan)
+        for st in self.models.values():
+            # old assignments are in dead coordinates; every model
+            # reshards onto the new plan before its next call
+            st.assignment = None
+        restore_s = 0.0
+        if lost:
+            if self.restore_models is None:
+                raise err
+            t0 = time.monotonic()
+            self.restore_models(sorted(lost))
+            restore_s = time.monotonic() - t0
+        reshard_s, moved = self._reshard_all_sync()
+        rec = {
+            "mode": "checkpoint" if lost else "live",
+            "dead_nodes": sorted(err.nodes),
+            "lost_models": sorted(lost),
+            "resumed_iteration": resumed_iteration,
+            "surviving_devices": surviving.size,
+            "replan_s": replan_s,
+            "restore_s": restore_s,
+            "reshard_s": reshard_s,
+            "moved_bytes": moved,
+            "total_s": time.monotonic() - t_start,
+        }
+        self.recoveries.append(rec)
+        self.topology_events.append(event)
+        return rec
+
+    def _reshard_all_sync(self) -> tuple[float, int]:
+        """Reshard every model's live weights onto its first planned
+        assignment, synchronously (recovery runs between event loops).
+        Restored-from-checkpoint weights take the same path: the restore
+        lands them host-side and this places them on the survivor mesh."""
+        if self.sharding_for is None:
+            return 0.0, 0
+        import jax
+        from repro.parallel import realloc_exec
+        t0 = time.monotonic()
+        moved = 0
+        for model_name, calls in self._model_call_chains().items():
+            st = self.models.get(model_name)
+            if st is None or not calls or not jax.tree.leaves(st.params):
+                continue
+            target = self._assignment_for(calls[0].name)
+            dst = self.sharding_for(model_name, target)
+            if dst is None:
+                continue
+            task = realloc_exec.prefetch_reshard(st.params, dst)
+            st.params = task.tree
+            task.wait()
+            moved += task.moved_bytes
+            st.assignment = target
+        return time.monotonic() - t0, moved
+
     def stats(self) -> dict:
         if not self.records:
             return {}
@@ -688,5 +1074,8 @@ class RuntimeEngine:
             # getattr: stats() also serves partially-constructed engines
             "recalibrations": getattr(self, "recalibrations", 0),
             "replans": getattr(self, "replans", 0),
+            "recoveries": len(getattr(self, "recoveries", [])),
+            "aborted_calls": getattr(self, "aborted_calls", 0),
+            "prefetch_aborted": getattr(self, "prefetch_aborted", 0),
             "calls": calls,
         }

@@ -260,6 +260,48 @@ def search(dfg: DataflowGraph, cluster: Cluster,
     return res
 
 
+# ------------------------------------------------------------ elastic replan
+
+def replan_on_topology(dfg: DataflowGraph, cluster: Cluster, cost: CostModel,
+                       *, base_plan: Optional[ExecutionPlan] = None,
+                       iters: int = 60, seed: int = 0,
+                       pipeline_iters: int = 1,
+                       mem_cap: Optional[float] = None,
+                       max_candidates: Optional[int] = None) -> ExecutionPlan:
+    """Fast plan search for an elastic topology change (host loss or gain).
+
+    Recovery sits on the critical path of a live run, so this is a *short*
+    MCMC chain seeded with the projection of the previous plan onto the
+    resized cluster: assignments whose mesh still fits are kept verbatim
+    (their parameters may not need to move at all); the rest fall back to
+    their greedy per-call optimum on the new cluster.  The seed is part of
+    the search space, so the returned plan is never worse than the
+    projection under the cost model.
+    """
+    cands = candidate_assignments(dfg, cluster, max_candidates,
+                                  random.Random(seed))
+    seeds = []
+    if base_plan is not None:
+        asg = {}
+        for call in dfg.calls:
+            a = base_plan.assignments.get(call.name)
+            if a is not None and a.mesh.fits(cluster):
+                asg[call.name] = a
+                continue
+            best, best_t = None, math.inf
+            for cand in cands[call.name]:
+                t = cost.call_time(call, cand)
+                if t < best_t:
+                    best, best_t = cand, t
+            asg[call.name] = best
+        if all(a is not None for a in asg.values()):
+            seeds.append(ExecutionPlan(asg, cluster))
+    res = mcmc_search(dfg, cluster, cost, iters=iters, seed=seed,
+                      extra_seeds=seeds, pipeline_iters=pipeline_iters,
+                      mem_cap=mem_cap, max_candidates=max_candidates)
+    return res.best_plan
+
+
 # ------------------------------------------------------- reference baselines
 
 def heuristic_plan(dfg: DataflowGraph, cluster: Cluster,

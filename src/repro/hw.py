@@ -68,20 +68,23 @@ HOST_CPU = ChipSpec(name="host-cpu", peak_flops_bf16=5e10, hbm_bytes=8e9,
                     hbm_bw=2e10, ici_link_bw=1e9)
 
 
-def fingerprint() -> str:
+def fingerprint(n_devices: "int | None" = None) -> str:
     """Stable identity of the hardware executing THIS process, used to key
     persisted profiles (core/profiler.ProfileStore): measurements taken on
     one machine must never calibrate the estimator on another.
 
     Format: ``"<backend>-<n>x<device_kind>"`` (e.g. ``"cpu-1xcpu"``,
     ``"tpu-8xTPU_v5e"``); falls back to the host architecture when no JAX
-    backend is importable.
+    backend is importable.  ``n_devices`` overrides the visible device
+    count — the elastic runtime keys profiles of a *degraded* fleet (hosts
+    masked out after a failure) without spawning a resized process.
     """
     try:
         import jax
         devs = jax.devices()
         kind = devs[0].device_kind.replace(" ", "_")
-        return f"{jax.default_backend()}-{len(devs)}x{kind}"
+        n = len(devs) if n_devices is None else n_devices
+        return f"{jax.default_backend()}-{n}x{kind}"
     except Exception:  # noqa: BLE001 — profiling is best-effort
         import platform
         return f"host-{platform.machine()}"

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import dfg as DFG
+from repro.core import fault as FLT
 from repro.core.estimator import CostModel, Profile
 from repro.core.plan import Cluster, ExecutionPlan
 from repro.core.runtime import ModelState, RuntimeEngine
@@ -81,6 +82,19 @@ class ExperimentConfig:
     # search and recalibration rank plans on steady-state per-iteration
     # time over the unrolled graph instead of the cold-start makespan.
     pipeline_depth: int = 1
+    # elastic fault tolerance (core/fault.py, docs/ARCHITECTURE.md):
+    # ``retry`` governs transient call failures (the default reproduces the
+    # historical single retry); ``max_recoveries`` bounds host-loss
+    # recoveries per run() — the engine masks the dead host, replans on the
+    # survivors, reshards live weights (checkpoint restore when every
+    # replica died) and resumes from the last retired iteration;
+    # ``replan_iters`` sizes the recovery-path MCMC (short: it sits on the
+    # recovery critical path, and it is seeded with the old plan's
+    # projection so short chains are safe).
+    retry: FLT.RetryPolicy = dataclasses.field(
+        default_factory=FLT.RetryPolicy)
+    max_recoveries: int = 2
+    replan_iters: int = 60
 
 
 class RLHFExperiment:
@@ -89,7 +103,8 @@ class RLHFExperiment:
     def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                  cluster: Cluster, exp: ExperimentConfig,
                  plan: Optional[ExecutionPlan] = None,
-                 search: bool = True):
+                 search: bool = True,
+                 fault_injector: Optional[FLT.FaultInjector] = None):
         self.actor_cfg, self.critic_cfg, self.exp = actor_cfg, critic_cfg, exp
         self.cluster = cluster
         self.graph = DFG.build_ppo(
@@ -128,7 +143,12 @@ class RLHFExperiment:
                                     self.models, cost_model=self.cost,
                                     pipeline_depth=exp.pipeline_depth,
                                     recalibrate_every=exp.recalibrate_every,
-                                    plan_candidates=candidates)
+                                    plan_candidates=candidates,
+                                    retry_policy=exp.retry,
+                                    fault_injector=fault_injector,
+                                    replanner=self._replan_on_topology,
+                                    restore_models=self._restore_lost,
+                                    max_recoveries=exp.max_recoveries)
         self.iteration = 0
         self.ckpt = None
         if exp.checkpoint_every > 0:
@@ -268,6 +288,43 @@ class RLHFExperiment:
 
         return self.engine.run(data_for, steps=steps, on_retire=on_retire,
                                quiesce_on_retire=self.ckpt is not None)
+
+    # ------------------------------------------------------------ elasticity
+    def _replan_on_topology(self, cluster: Cluster,
+                            event) -> ExecutionPlan:
+        """Engine callback on a topology change (host loss or gain): a
+        short MCMC on the resized cluster, seeded with the old plan's
+        projection so surviving assignments tend to stay put (their
+        parameters then need no move at all)."""
+        from repro.core.search import replan_on_topology
+        plan = replan_on_topology(
+            self.graph, cluster, self.cost, base_plan=self.plan,
+            iters=self.exp.replan_iters, seed=self.exp.seed,
+            pipeline_iters=max(self.exp.pipeline_depth, 1))
+        self.cluster = cluster
+        self.plan = plan
+        return plan
+
+    def _restore_lost(self, lost: list[str]):
+        """Engine fallback when a model lost every replica: restore just
+        those models (+ their opt states) from the newest valid
+        checkpoint.  Models with a surviving replica are NOT touched —
+        they recover live via resharding."""
+        if self.ckpt is None:
+            raise RuntimeError(
+                f"models {lost} lost every replica and no checkpointing is "
+                "configured (set ExperimentConfig.checkpoint_every)")
+        template = {}
+        for name in lost:
+            template[name] = self.models[name].params
+            if name in ("actor", "critic"):
+                template[f"{name}_opt"] = self.models[name].opt_state
+        self.ckpt.wait()
+        _step, trees, _extra = self.ckpt.restore(template)
+        for name in lost:
+            self.models[name].params = trees[name]
+            if f"{name}_opt" in trees:
+                self.models[name].opt_state = trees[f"{name}_opt"]
 
     # ---------------------------------------------------------- calibration
     def save_profile(self) -> None:

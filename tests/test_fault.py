@@ -1,0 +1,492 @@
+"""Chaos-path behaviours of the elastic fault-tolerant runtime
+(core/fault.py + RuntimeEngine recovery): transient retry under a
+RetryPolicy, host-loss recovery by replan + live reshard (bit-identical
+weights), checkpoint fallback when every replica dies, device gain at
+retirement, depth-2 recovery under the on-policy version-edge guard, the
+prefetch-drain calibration hygiene, and torn-write-safe checkpoints.
+
+Everything runs on the single CPU device: logical device loss is what the
+engine reasons about (meshes, replica groups, plans), and the reshards
+degenerate to aliases while exercising the identical code path.  Physical
+multi-device recovery is covered by benchmarks/chaos_bench.py in a
+4-device subprocess.
+"""
+
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import hw
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import fault as FLT
+from repro.core.dfg import (DataflowGraph, FunctionCall, Workload, GENERATE,
+                            INFERENCE, TRAIN)
+from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
+                             ParallelStrategy)
+from repro.core.runtime import ModelState, RuntimeEngine
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------- toy harness
+
+def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
+    """PPO-shaped 4-call toy on a logical 2x2 cluster with deterministic,
+    placement-independent train updates (x -> x*0.5 + r): weights after k
+    iterations are an exact function of the retired call sequence, so
+    bit-identity across a recovery is a strict replay-correctness check.
+
+    ``actor_nodes="full"`` puts gen on the full mesh dp=4 (a replica
+    survives any single-host loss -> live recovery); ``actor_nodes=1`` pins
+    the actor entirely to node 1 (killing node 1 loses every replica ->
+    checkpoint fallback).
+    """
+    cluster = Cluster(n_nodes=2, devs_per_node=2, chip=hw.HOST_CPU)
+    w = Workload(2, 4, 4)
+    calls = [
+        FunctionCall("gen", "actor", GENERATE, None, w,
+                     ("prompts",), ("seq",), trainable=True),
+        FunctionCall("rew", "reward", INFERENCE, None, w,
+                     ("seq",), ("r",)),
+        FunctionCall("atrain", "actor", TRAIN, None, w,
+                     ("r",), ("a_out",), trainable=True),
+        FunctionCall("ctrain", "critic", TRAIN, None, w,
+                     ("r",), ("c_out",), trainable=True),
+    ]
+    dfg = DataflowGraph(calls, "chaos-toy")
+    node0 = DeviceMesh(0, 1, 0, 2)
+    node1 = DeviceMesh(1, 1, 0, 2)
+    full = cluster.full_mesh()
+    if actor_nodes == "full":
+        # dp=4 on the full mesh: each device is one replica group
+        gen_asg = Assignment(full, ParallelStrategy(4, 1, 1, 1))
+        atrain_asg = Assignment(node0, ParallelStrategy(1, 2, 1, 1))
+    else:
+        # actor lives only on node 1 -> node-1 loss kills every replica
+        gen_asg = Assignment(node1, ParallelStrategy(2, 1, 1, 1))
+        atrain_asg = Assignment(node1, ParallelStrategy(1, 2, 1, 1))
+    plan = ExecutionPlan({
+        "gen": gen_asg,
+        "rew": Assignment(node1, ParallelStrategy(2, 1, 1, 1)),
+        "atrain": atrain_asg,
+        "ctrain": Assignment(node0, ParallelStrategy(2, 1, 1, 1)),
+    }, cluster)
+
+    jmesh = jax.make_mesh((1,), ("x",))
+    sh = NamedSharding(jmesh, P())
+
+    def sharding_for(model_name, asg):
+        if model_name in ("actor", "critic"):
+            return {"w": sh}
+        return None
+
+    models = {
+        "actor": ModelState({"w": jnp.ones((dim, dim), jnp.float32)}),
+        "reward": ModelState({}),
+        "critic": ModelState({"w": jnp.full((dim, dim), 2.0, jnp.float32)}),
+    }
+    counts = {}
+
+    def bump(name):
+        counts[name] = counts.get(name, 0) + 1
+
+    def gen(ms, inputs):
+        time.sleep(sleep_s)
+        bump("gen")
+        return {"seq": inputs["prompts"]}
+
+    def rew(ms, inputs):
+        time.sleep(sleep_s)
+        bump("rew")
+        return {"r": 2 * inputs["seq"] + 1}
+
+    def mk_train(name, out_key):
+        def train(ms, inputs):
+            time.sleep(sleep_s)
+            bump(name)
+            r = float(inputs["r"])
+            ms.params = jax.tree.map(lambda x: x * 0.5 + r, ms.params)
+            return {out_key: r}
+        return train
+
+    executors = {"gen": gen, "rew": rew,
+                 "atrain": mk_train("atrain", "a_out"),
+                 "ctrain": mk_train("ctrain", "c_out")}
+
+    def replanner(new_cluster, event):
+        """Hand-rolled elastic replan for the toy (its calls carry no model
+        config, so the real search is exercised in test_rlhf/chaos_bench):
+        everything data-parallel on the resized full mesh, actor trains
+        tensor-parallel so the gen->train layout flip stays live."""
+        nfull = new_cluster.full_mesh()
+        n = nfull.size
+        dp = Assignment(nfull, ParallelStrategy(n, 1, 1, 1))
+        tp = Assignment(nfull, ParallelStrategy(1, n, 1, 1))
+        return ExecutionPlan({"gen": dp, "rew": dp, "atrain": tp,
+                              "ctrain": dp}, new_cluster)
+
+    return dfg, plan, executors, models, sharding_for, replanner, counts
+
+
+def _leaves(ms):
+    return [np.asarray(x) for x in jax.tree.leaves(ms.params)]
+
+
+def _reference_weights(steps, **kw):
+    dfg, plan, executors, models, sharding_for, replanner, _ = _toy(**kw)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for)
+    eng.run(lambda t: {"prompts": t}, steps=steps)
+    return _leaves(models["actor"]), _leaves(models["critic"])
+
+
+# ----------------------------------------------------------- transient retry
+
+def test_transient_failure_retried_with_backoff_then_succeeds():
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().fail_transient("rew", times=2)
+    policy = FLT.RetryPolicy(max_attempts=3, backoff_s=0.05,
+                             backoff_factor=2.0)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        retry_policy=policy)
+    t0 = time.monotonic()
+    pools = eng.run(lambda t: {"prompts": t}, steps=1)
+    elapsed = time.monotonic() - t0
+    assert pools[0]["r"] == 1
+    rec = next(r for r in eng.records if r.name == "rew")
+    assert rec.attempts == 3 and rec.retried
+    assert eng.stats()["retries"] == 1
+    # exponential backoff slept 0.05 then 0.10 before the two retries
+    assert elapsed >= 0.15
+    assert [f[0] for f in inj.fired] == ["transient", "transient"]
+
+
+def test_retry_policy_backoff_and_overrides():
+    pol = FLT.RetryPolicy(max_attempts=4, backoff_s=0.1, backoff_factor=2.0,
+                          max_backoff_s=0.3,
+                          overrides={GENERATE: FLT.RetryPolicy(
+                              max_attempts=1)})
+    assert pol.backoff_for(1) == pytest.approx(0.1)
+    assert pol.backoff_for(2) == pytest.approx(0.2)
+    assert pol.backoff_for(3) == pytest.approx(0.3)  # capped
+    assert pol.for_call_type(GENERATE).max_attempts == 1
+    assert pol.for_call_type(TRAIN) is pol
+    with pytest.raises(ValueError):
+        FLT.RetryPolicy(max_attempts=0)
+
+
+def test_retry_exhaustion_still_propagates():
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy(
+        sleep_s=0.0)
+    inj = FLT.FaultInjector().fail_transient("rew", times=10)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        retry_policy=FLT.RetryPolicy(max_attempts=2))
+    with pytest.raises(FLT.TransientError):
+        eng.run(lambda t: {"prompts": t}, steps=2)
+    assert eng.iterations_done == 0
+
+
+# ------------------------------------------------------- host loss: recovery
+
+def test_device_loss_replans_and_recovers_live_bit_identical():
+    ref_actor, ref_critic = _reference_weights(3)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=1)
+
+    def never_restore(lost):
+        raise AssertionError(f"checkpoint fallback used for {lost} "
+                             "though a replica survived")
+
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        replanner=replanner, restore_models=never_restore)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    # exactly one recovery, live mode, masked node 1, resumed after iter 1
+    assert len(eng.recoveries) == 1
+    rec = eng.recoveries[0]
+    assert rec["mode"] == "live" and rec["lost_models"] == []
+    assert rec["dead_nodes"] == [1]
+    assert rec["resumed_iteration"] == 1
+    assert eng.plan.cluster.n_nodes == 1  # survivor topology
+    assert eng.stats()["recoveries"] == 1
+    # exactly-once execution: completed calls were never replayed (gen@1
+    # ran before the kill; the killed rew@1 never counted)
+    assert counts == {"gen": 3, "rew": 3, "atrain": 3, "ctrain": 3}
+    # weights bit-identical to the uninterrupted run at the same iteration
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_all_replicas_lost_falls_back_to_checkpoint(tmp_path):
+    ref_actor, ref_critic = _reference_weights(3, actor_nodes=1)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy(
+        actor_nodes=1)
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=1)
+    ckpt = CheckpointManager(tmp_path / "ckpt", keep=5)
+
+    def on_retire(t, pool):
+        ckpt.save(t, {"actor": models["actor"].params})
+
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        replanner=replanner)
+
+    def restore(lost):
+        assert lost == ["actor"]
+        _s, trees, _x = ckpt.restore({"actor": models["actor"].params})
+        models["actor"].params = trees["actor"]
+
+    eng.restore_models = restore
+    pools = eng.run(lambda t: {"prompts": t}, steps=3, on_retire=on_retire)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    rec = eng.recoveries[0]
+    assert rec["mode"] == "checkpoint"
+    assert rec["lost_models"] == ["actor"]
+    assert rec["restore_s"] > 0
+    # the critic had a surviving replica on node 0: recovered live
+    assert "critic" not in rec["lost_models"]
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_device_loss_without_replanner_is_fatal():
+    dfg, plan, executors, models, sharding_for, _rp, _c = _toy(sleep_s=0.0)
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=0)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj)
+    with pytest.raises(FLT.DeviceLostError):
+        eng.run(lambda t: {"prompts": t}, steps=2)
+
+
+def test_depth2_recovery_keeps_version_edge_guard():
+    ref_actor, ref_critic = _reference_weights(4)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=2)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        replanner=replanner, pipeline_depth=2)
+    pools = eng.run(lambda t: {"prompts": t}, steps=4)
+    assert [p["r"] for p in pools] == [1, 3, 5, 7]
+    assert len(eng.recoveries) == 1 and eng.recoveries[0]["mode"] == "live"
+    # exactly-once TRAIN across the recovery
+    assert counts["atrain"] == 4 and counts["ctrain"] == 4
+    # on-policy guard: gen@t never started before atrain@t-1 ended, even
+    # across the recovery boundary (records span both attempts)
+    recs = {(r.name, r.iteration): r for r in eng.records}
+    # one record per (call, iteration): completed calls were never replayed
+    assert len(eng.records) == 16 and len(recs) == 16
+    for t in range(1, 4):
+        assert recs[("gen", t)].start >= recs[("atrain", t - 1)].end
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- device gain
+
+def test_device_gain_grows_plan_at_retirement():
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, replanner=replanner)
+    eng.add_hosts(1)
+    eng.run(lambda t: {"prompts": t}, steps=2)
+    # consumed at the first retirement: mesh grew 2 -> 3 nodes and the
+    # replanner's expanded plan was adopted for the remaining iterations
+    assert eng.plan.cluster.n_nodes == 3
+    assert eng.plan.assignments["gen"].mesh.size == 6
+    gains = [e for e in eng.topology_events if e.kind == "gain"]
+    assert len(gains) == 1 and gains[0].nodes == (2,)
+    assert eng.iterations_done == 2
+
+
+# ------------------------------------------- prefetch drain (calibration)
+
+class _FakeTask:
+    def __init__(self, moved=1024, elapsed=0.01):
+        self.tree = {"w": jnp.ones((2, 2))}
+        self.moved_bytes = moved
+        self.total_bytes = moved
+        self.elapsed_s = elapsed
+
+    def wait(self):
+        return self.tree
+
+
+class _FakeSched:
+    time = 0.02
+
+
+def _drain(eng, name, fold):
+    asyncio.run(eng._drain_prefetch(name, fold=fold))
+
+
+def test_drained_prefetch_excluded_from_realloc_calibration():
+    """The satellite bug: a failed call's in-flight prefetch must be
+    awaited AND kept out of CostModel.record_realloc — only planned,
+    consumed reallocations calibrate the transfer model."""
+    from repro.core.estimator import CostModel
+    dfg, plan, executors, models, sharding_for, replanner, _ = _toy()
+    cost = CostModel(plan.cluster)
+    eng = RuntimeEngine(dfg, plan, executors, models, cost_model=cost,
+                        sharding_for=sharding_for)
+    target = plan.assignments["atrain"]
+    st = models["actor"]
+
+    # abort path (fold=False): drained, counted, NOT folded
+    st.prefetch = (target, _FakeTask(), {"sched": _FakeSched(),
+                                         "cross": False, "waiter": None})
+    _drain(eng, "actor", fold=False)
+    assert st.prefetch is None
+    assert st.assignment == target
+    assert eng.prefetch_aborted == 1
+    assert cost._realloc_samples == []
+
+    # consumed path (fold=True): the same drain folds the measurement
+    st.prefetch = (target, _FakeTask(), {"sched": _FakeSched(),
+                                         "cross": False, "waiter": None})
+    _drain(eng, "actor", fold=True)
+    assert cost._realloc_samples == [(_FakeSched.time, 0.01)]
+    assert eng.prefetch_aborted == 1  # unchanged
+
+
+def test_transient_retry_drains_prefetch_without_folding():
+    """End-to-end: a transiently failing call whose model has a prefetch in
+    flight drains it on the retry path instead of leaking the task (the
+    prefetch is planted at failure time — one dispatched *after* the call's
+    own reallocation, as a replan or chain race would)."""
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        prefetch_realloc=False)  # deterministic: no chain
+    target = plan.assignments["atrain"]
+    orig = executors["atrain"]
+    state = {"failed": False}
+
+    def flaky_atrain(ms, inputs):
+        if not state["failed"]:
+            state["failed"] = True
+            models["actor"].prefetch = (target, _FakeTask(),
+                                        {"sched": _FakeSched(),
+                                         "cross": False, "waiter": None})
+            raise RuntimeError("flaky train step")
+        return orig(ms, inputs)
+
+    eng.executors = dict(executors, atrain=flaky_atrain)
+    pools = eng.run(lambda t: {"prompts": t}, steps=1)
+    assert pools[0]["a_out"] == 1.0
+    assert models["actor"].prefetch is None
+    assert eng.stats()["retries"] == 1
+    assert eng.prefetch_aborted == 1
+
+
+# ------------------------------------------------- torn-write checkpoints
+
+def _save_two_steps(root):
+    ckpt = CheckpointManager(root, keep=5)
+    ckpt.save(1, {"m": {"w": jnp.arange(8, dtype=jnp.float32)}})
+    ckpt.save(2, {"m": {"w": jnp.arange(8, dtype=jnp.float32) * 10}})
+    return ckpt
+
+
+def test_truncated_npy_falls_back_to_previous_step(tmp_path):
+    ckpt = _save_two_steps(tmp_path / "c")
+    assert ckpt.latest_step() == 2
+    # tear the newest step's array mid-write
+    d = ckpt.root / "step_000000002"
+    npy = next(d.glob("*.npy"))
+    npy.write_bytes(npy.read_bytes()[:10])
+    assert not ckpt.valid_step(2)
+    assert ckpt.latest_step() == 1  # despite LATEST pointing at 2
+    step, trees, _ = ckpt.restore({"m": {"w": jnp.zeros(8)}})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(trees["m"]["w"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_corrupt_manifest_falls_back_to_previous_step(tmp_path):
+    ckpt = _save_two_steps(tmp_path / "c")
+    (ckpt.root / "step_000000002" / "manifest.json").write_text("{not json")
+    assert ckpt.latest_step() == 1
+    step, trees, _ = ckpt.restore({"m": {"w": jnp.zeros(8)}})
+    assert step == 1
+
+
+def test_missing_shard_file_falls_back(tmp_path):
+    ckpt = _save_two_steps(tmp_path / "c")
+    d = ckpt.root / "step_000000002"
+    next(d.glob("*.npy")).unlink()
+    assert ckpt.latest_step() == 1
+    step, _trees, _ = ckpt.restore({"m": {"w": jnp.zeros(8)}})
+    assert step == 1
+
+
+def test_explicit_step_restore_raises_on_corruption(tmp_path):
+    ckpt = _save_two_steps(tmp_path / "c")
+    next((ckpt.root / "step_000000002").glob("*.npy")).unlink()
+    with pytest.raises((OSError, ValueError)):
+        ckpt.restore({"m": {"w": jnp.zeros(8)}}, step=2)
+
+
+def test_all_checkpoints_corrupt_raises_filenotfound(tmp_path):
+    ckpt = _save_two_steps(tmp_path / "c")
+    for d in ckpt.root.glob("step_*"):
+        (d / "manifest.json").write_text("{")
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore({"m": {"w": jnp.zeros(8)}})
+
+
+# --------------------------------------------------- fault model unit tests
+
+def test_replica_groups_and_live_replica():
+    cluster = Cluster(n_nodes=2, devs_per_node=2)
+    full = cluster.full_mesh()
+    dp4 = Assignment(full, ParallelStrategy(4, 1, 1, 1))
+    tp4 = Assignment(full, ParallelStrategy(1, 4, 1, 1))
+    dp2tp2 = Assignment(full, ParallelStrategy(2, 2, 1, 1))
+    dead_node1 = frozenset({2, 3})
+    assert FLT.replica_groups(dp4, 2) == [frozenset({i}) for i in range(4)]
+    assert FLT.has_live_replica(dp4, dead_node1, 2)
+    assert not FLT.has_live_replica(tp4, dead_node1, 2)  # one sharded copy
+    # dp2tp2: replica {0,1} on node 0 survives, {2,3} dies
+    assert FLT.has_live_replica(dp2tp2, dead_node1, 2)
+    assert not FLT.has_live_replica(dp2tp2, frozenset({1, 2, 3}), 2)
+
+
+def test_device_health_compaction_composes():
+    h = FLT.DeviceHealth(Cluster(n_nodes=4, devs_per_node=2))
+    h.mark_host_dead(1)
+    assert h.dead_devices() == frozenset({2, 3})
+    cluster, node_map = h.compact()
+    assert cluster.n_nodes == 3
+    assert node_map == {0: 0, 2: 1, 3: 2}
+    # a second failure is expressed in the new coordinates
+    h.mark_host_dead(2)  # old node 3
+    cluster2, node_map2 = h.compact()
+    assert cluster2.n_nodes == 2 and node_map2 == {0: 0, 1: 1}
+    h.gain_hosts(2)
+    cluster3, _ = h.compact()
+    assert cluster3.n_nodes == 4
+    assert [e.kind for e in h.events] == ["loss", "loss", "gain"]
+
+
+def test_injector_matches_call_and_iteration():
+    inj = FLT.FaultInjector()
+    inj.fail_transient("rew", at_iteration=1)
+    inj.on_execute("rew", 0)  # wrong iteration: no fire
+    inj.on_execute("gen@1", 1)  # wrong call: no fire
+    with pytest.raises(FLT.TransientError):
+        inj.on_execute("rew@1", 1)  # unrolled names match by base name
+    inj.on_execute("rew", 1)  # consumed: fires once
+    assert inj.fired == [("transient", "rew", 1)]
