@@ -23,9 +23,29 @@ checkpoint path at depth 1 (a retirement-time snapshot is only exact when
 no later train step may already have run).
 
 Reported recovery times come from ``engine.recoveries[0]`` (replan +
-restore + reshard + bookkeeping, measured inside the engine).  Wired into
-``benchmarks/run.py`` as ``--only chaos``; CI runs ``--smoke --json`` and
-uploads ``chaos_bench.json``.
+restore + reshard + bookkeeping, measured inside the engine).
+
+Two graceful-degradation scenarios ride on the same toy
+(``--scenario preempt`` / ``--scenario straggler``):
+
+  preempt   — a scripted preemption *notice* for node 1 instead of a kill:
+              the engine migrates (replan avoiding the doomed host, live
+              drain, retire at a safe point) with zero aborted calls and
+              zero checkpoint restores, and the benchmark asserts the
+              migrate recovery work is strictly cheaper than the reactive
+              live path above, at bit-identical weights
+  straggler — a scripted delay stalls one inference call far past its
+              deadline; with ``speculative_redispatch`` the engine races a
+              duplicate on the idle node and the first finisher wins.  The
+              benchmark asserts the speculative run beats the
+              no-speculation baseline wall clock, TRAIN calls ran exactly
+              once (never duplicated), and weights stay bit-identical
+
+The toy's trainable models carry optimizer-moment trees (the train update
+folds the moment into the weights), so opt-state recovery errors are
+observable as weight divergence, not just metadata drift.  Wired into
+``benchmarks/run.py`` as ``--only chaos``; CI runs each scenario with
+``--smoke --json`` and uploads the JSON artifacts.
 """
 
 from __future__ import annotations
@@ -45,9 +65,11 @@ N_NODES = 2
 def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
     """Build (dfg, plan, models, sharding_for, executors, replanner).
 
-    Deterministic, placement-independent train updates (x -> x*0.5 + r):
-    final weights are an exact function of the retired call sequence, so
-    comparing against an uninterrupted run is a strict replay check.
+    Deterministic, placement-independent train updates through an
+    optimizer-moment tree (m -> m*0.9 + r; x -> x*0.5 + m): final weights
+    are an exact function of the retired call sequence AND the recovered
+    moments, so comparing against an uninterrupted run is a strict replay
+    check that also catches stale/corrupted opt state.
     ``actor_on="full"`` generates dp=4 on the full mesh (a replica survives
     any single-host loss); ``actor_on="node1"`` pins the actor to node 1
     (the node the injector kills) so every replica dies.
@@ -119,6 +141,16 @@ def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
                                    (n + 1) * DEVS_PER_NODE)}
             state["phys"] = [p for i, p in enumerate(state["phys"])
                              if i not in dead]
+        if event.kind == "notice":
+            # preemption: SAME cluster (the doomed host is still up and
+            # draining — no renumbering), everything planned off of it.
+            # The toy only ever notices node 1, so node 0 survives.
+            mesh = DeviceMesh(0, 1, 0, DEVS_PER_NODE)
+            n = mesh.size
+            dp = Assignment(mesh, ParallelStrategy(n, 1, 1, 1))
+            tp = Assignment(mesh, ParallelStrategy(1, n, 1, 1))
+            return ExecutionPlan({"gen": dp, "rew": dp, "atrain": tp,
+                                  "ctrain": dp}, new_cluster)
         nfull = new_cluster.full_mesh()
         n = nfull.size
         dp = Assignment(nfull, ParallelStrategy(n, 1, 1, 1))
@@ -126,13 +158,19 @@ def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
         return ExecutionPlan({"gen": dp, "rew": dp, "atrain": tp,
                               "ctrain": dp}, new_cluster)
 
+    # opt-moment trees mirror the param keys, so ``sharding_for`` doubles
+    # as the engine's ``opt_sharding_for``
     models = {
         "actor": ModelState({f"w{i}": jnp.full((dim, dim), float(i + 1),
                                                jnp.float32)
+                             for i in range(n_leaves)},
+                            {f"w{i}": jnp.zeros((dim, dim), jnp.float32)
                              for i in range(n_leaves)}),
         "reward": ModelState({}),
         "critic": ModelState({f"w{i}": jnp.full((dim, dim), 2.0,
                                                 jnp.float32)
+                              for i in range(n_leaves)},
+                             {f"w{i}": jnp.zeros((dim, dim), jnp.float32)
                               for i in range(n_leaves)}),
     }
 
@@ -149,7 +187,12 @@ def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
             import jax as _jax
             time.sleep(sleep_s)
             r = float(inputs["r"])
-            ms.params = _jax.tree.map(lambda x: x * 0.5 + r, ms.params)
+            # moment update folds into the weights: stale or lost moments
+            # corrupt the weights observably, not just silently
+            ms.opt_state = _jax.tree.map(lambda m: m * 0.9 + r,
+                                         ms.opt_state)
+            ms.params = _jax.tree.map(lambda x, m: x * 0.5 + m,
+                                      ms.params, ms.opt_state)
             return {out_key: r}
         return train
 
@@ -161,14 +204,17 @@ def _toy(*, actor_on="full", dim=512, n_leaves=8, sleep_s=0.01):
 def _leaves(ms):
     import jax
     import numpy as np
-    return [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(ms.params)]
+    # params AND opt moments: identity must cover the full trainable state
+    return [np.asarray(jax.device_get(x))
+            for x in jax.tree.leaves((ms.params, ms.opt_state))]
 
 
 def _reference(steps, **kw):
     from repro.core.runtime import RuntimeEngine
     dfg, plan, models, sharding_for, executors, _rp = _toy(**kw)
     eng = RuntimeEngine(dfg, plan, executors, models,
-                        sharding_for=sharding_for)
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for)
     eng.run(lambda t: {"prompts": t}, steps=steps)
     return _leaves(models["actor"]), _leaves(models["critic"])
 
@@ -196,22 +242,27 @@ def _run_scenario(*, mode, depth, steps, kill_iter, dim, n_leaves, sleep_s,
     inj = FLT.FaultInjector().kill_host(1, at_call="rew",
                                         at_iteration=kill_iter)
     eng = RuntimeEngine(dfg, plan, executors, models,
-                        sharding_for=sharding_for, fault_injector=inj,
-                        replanner=replanner)
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner)
     on_retire = None
     if mode == "checkpoint":
         ckpt = CheckpointManager(ckpt_dir, keep=3)
 
         def on_retire(t, pool):
             ckpt.save(t, {"actor": models["actor"].params,
-                          "critic": models["critic"].params})
+                          "critic": models["critic"].params,
+                          "actor_opt": models["actor"].opt_state,
+                          "critic_opt": models["critic"].opt_state})
 
         def restore(lost):
             ckpt.wait()
-            _s, trees, _x = ckpt.restore(
-                {n: models[n].params for n in lost})
+            template = {n: models[n].params for n in lost}
+            template.update({f"{n}_opt": models[n].opt_state for n in lost})
+            _s, trees, _x = ckpt.restore(template)
             for n in lost:
                 models[n].params = trees[n]
+                models[n].opt_state = trees[f"{n}_opt"]
 
         eng.restore_models = restore
     t0 = time.monotonic()
@@ -233,8 +284,111 @@ def _run_scenario(*, mode, depth, steps, kill_iter, dim, n_leaves, sleep_s,
         "lost_models": rec["lost_models"],
         "surviving_devices": rec["surviving_devices"],
         "resumed_iteration": rec["resumed_iteration"],
+        "opt_state_resharded_bytes": eng.opt_state_resharded_bytes,
         "bit_identical": _identical(models, ref),
         "run_wall_s": wall_s,
+    }
+
+
+def _run_preempt(*, steps, notice_iter, deadline_s, dim, n_leaves, sleep_s,
+                 depth=1):
+    """Notice node 1 at ``rew@notice_iter`` with a generous deadline: the
+    engine must migrate — zero aborted calls, zero checkpoint restores —
+    and finish bit-identical to the uninterrupted run."""
+    from repro.core import fault as FLT
+    from repro.core.runtime import RuntimeEngine
+
+    kw = {"actor_on": "full", "dim": dim, "n_leaves": n_leaves,
+          "sleep_s": sleep_s}
+    ref = _reference(steps, **kw)
+    dfg, plan, models, sharding_for, executors, replanner = _toy(**kw)
+    inj = FLT.FaultInjector().notice(1, deadline_s, at_call="rew",
+                                     at_iteration=notice_iter)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner)
+    t0 = time.monotonic()
+    eng.run(lambda t: {"prompts": t}, steps=steps, pipeline_depth=depth)
+    wall_s = time.monotonic() - t0
+    stats = eng.stats()
+    assert eng.aborted_calls == 0, eng.aborted_calls
+    assert len(eng.recoveries) == 1, eng.recoveries
+    rec = dict(eng.recoveries[0])
+    assert rec["mode"] == "migrate", rec
+    assert rec["restore_s"] == 0.0 and not rec["lost_models"], rec
+    assert stats["preemption_migrations"] == 1, stats
+    return {
+        "mode": "migrate",
+        "pipeline_depth": depth,
+        "noticed_at": f"rew@{notice_iter}",
+        "deadline_s": deadline_s,
+        "recovery_s": rec["total_s"],
+        "drain_s": rec["drain_s"],
+        "replan_s": rec["replan_s"],
+        "reshard_s": rec["reshard_s"],
+        "moved_bytes": rec["moved_bytes"],
+        "aborted_calls": eng.aborted_calls,
+        "checkpoint_restores": 0,
+        "bit_identical": _identical(models, ref),
+        "run_wall_s": wall_s,
+    }
+
+
+def _run_straggler(*, speculate, steps, delay_iter, delay_s, dim, n_leaves,
+                   sleep_s, base_s=0.05, factor=2.0):
+    """Stall ``rew@delay_iter`` for ``delay_s`` (far past its deadline
+    ``factor * base_s``); with ``speculate`` the engine races a duplicate
+    on the idle node.  TRAIN calls must run exactly once either way."""
+    from repro.core import fault as FLT
+    from repro.core.dfg import TRAIN, base_name
+    from repro.core.runtime import RuntimeEngine
+
+    class _FlatCost:
+        """Deadline source only: the toy calls have no ModelConfig, so the
+        analytic estimator can't price them."""
+
+        def __init__(self, base):
+            self.base = base
+
+        def call_time(self, call, asg):
+            return self.base
+
+    kw = {"actor_on": "full", "dim": dim, "n_leaves": n_leaves,
+          "sleep_s": sleep_s}
+    ref = _reference(steps, **kw)
+    dfg, plan, models, sharding_for, executors, replanner = _toy(**kw)
+    inj = FLT.FaultInjector().delay_call("rew", seconds=delay_s,
+                                         at_iteration=delay_iter)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        cost_model=_FlatCost(base_s),
+                        straggler_factor=factor,
+                        fault_injector=inj,
+                        speculative_redispatch=speculate)
+    t0 = time.monotonic()
+    eng.run(lambda t: {"prompts": t}, steps=steps)
+    wall_s = time.monotonic() - t0
+    stats = eng.stats()
+    # exactly-once TRAIN: never duplicated, one record per iteration
+    train_counts: dict[str, int] = {}
+    for r in eng.records:
+        call = dfg.by_name[base_name(r.name)]
+        if call.call_type == TRAIN:
+            assert not r.speculated, r
+            train_counts[call.name] = train_counts.get(call.name, 0) + 1
+    assert all(n == steps for n in train_counts.values()), train_counts
+    return {
+        "speculative_redispatch": speculate,
+        "delayed_at": f"rew@{delay_iter}",
+        "delay_s": delay_s,
+        "deadline_s": base_s * factor,
+        "wall_s": wall_s,
+        "stragglers": stats["stragglers"],
+        "speculative_dispatches": stats["speculative_dispatches"],
+        "speculative_wins": stats["speculative_wins"],
+        "bit_identical": _identical(models, ref),
     }
 
 
@@ -288,6 +442,107 @@ def bench_chaos(steps=6, kill_iter=2, dim=512, n_leaves=8, sleep_s=0.01,
     return rows, summary
 
 
+def bench_preempt(steps=6, notice_iter=2, dim=512, n_leaves=8, sleep_s=0.01,
+                  deadline_s=60.0, **_ignored):
+    """Preemption-notice migration vs the reactive live-recovery path on
+    the same loss; returns (csv_rows, json_summary)."""
+    import jax
+    # warm-up (see bench_chaos): the measured recoveries must be warm
+    _run_scenario(mode="live", depth=1, steps=3, kill_iter=1, dim=dim,
+                  n_leaves=n_leaves, sleep_s=0.0)
+    reactive = _run_scenario(mode="live", depth=1, steps=steps,
+                             kill_iter=notice_iter, dim=dim,
+                             n_leaves=n_leaves, sleep_s=sleep_s)
+    migrate = _run_preempt(steps=steps, notice_iter=notice_iter,
+                           deadline_s=deadline_s, dim=dim,
+                           n_leaves=n_leaves, sleep_s=sleep_s)
+    summary = {
+        "workload": {"steps": steps, "notice_iter": notice_iter, "dim": dim,
+                     "n_leaves": n_leaves, "sleep_s": sleep_s,
+                     "deadline_s": deadline_s,
+                     "devices": len(jax.devices()),
+                     "param_bytes_per_model": n_leaves * dim * dim * 4},
+        "migrate": migrate,
+        "reactive_live": reactive,
+        "migrate_vs_reactive_speedup": (reactive["recovery_s"]
+                                        / max(migrate["recovery_s"], 1e-9)),
+        "migrate_faster": migrate["recovery_s"] < reactive["recovery_s"],
+        "all_bit_identical": (migrate["bit_identical"]
+                              and reactive["bit_identical"]),
+    }
+    rows = [
+        ("chaos/preempt_migrate", migrate["recovery_s"] * 1e6,
+         f"drain_s={migrate['drain_s']:.4f};"
+         f"replan_s={migrate['replan_s']:.4f};"
+         f"aborted={migrate['aborted_calls']};"
+         f"restores={migrate['checkpoint_restores']};"
+         f"identical={migrate['bit_identical']}"),
+        ("chaos/preempt_reactive_live", reactive["recovery_s"] * 1e6,
+         f"reshard_s={reactive['reshard_s']:.4f};"
+         f"identical={reactive['bit_identical']}"),
+        ("chaos/preempt_vs_reactive", 0.0,
+         f"speedup={summary['migrate_vs_reactive_speedup']:.2f}x;"
+         f"migrate_faster={summary['migrate_faster']}"),
+    ]
+    return rows, summary
+
+
+def bench_straggler(steps=5, delay_iter=1, delay_s=0.5, dim=256, n_leaves=8,
+                    sleep_s=0.01, **_ignored):
+    """Speculative straggler re-dispatch vs eating the stall; returns
+    (csv_rows, json_summary)."""
+    import jax
+    kw = dict(steps=steps, delay_iter=delay_iter, delay_s=delay_s, dim=dim,
+              n_leaves=n_leaves, sleep_s=sleep_s)
+    # warm-up: JAX compile/dispatch of the clone-reshard path
+    _run_straggler(speculate=True, **{**kw, "steps": 3, "sleep_s": 0.0,
+                                     "delay_s": 0.2})
+    baseline = _run_straggler(speculate=False, **kw)
+    spec = _run_straggler(speculate=True, **kw)
+    assert spec["speculative_dispatches"] >= 1, spec
+    summary = {
+        "workload": {"steps": steps, "delay_iter": delay_iter,
+                     "delay_s": delay_s, "dim": dim, "n_leaves": n_leaves,
+                     "sleep_s": sleep_s, "devices": len(jax.devices())},
+        "speculative": spec,
+        "no_speculation": baseline,
+        "wall_speedup": baseline["wall_s"] / max(spec["wall_s"], 1e-9),
+        "speculation_faster": spec["wall_s"] < baseline["wall_s"],
+        "all_bit_identical": (spec["bit_identical"]
+                              and baseline["bit_identical"]),
+    }
+    rows = [
+        ("chaos/straggler_speculative", spec["wall_s"] * 1e6,
+         f"dispatches={spec['speculative_dispatches']};"
+         f"wins={spec['speculative_wins']};"
+         f"identical={spec['bit_identical']}"),
+        ("chaos/straggler_baseline", baseline["wall_s"] * 1e6,
+         f"stragglers={baseline['stragglers']};"
+         f"identical={baseline['bit_identical']}"),
+        ("chaos/straggler_vs_baseline", 0.0,
+         f"speedup={summary['wall_speedup']:.2f}x;"
+         f"faster={summary['speculation_faster']}"),
+    ]
+    return rows, summary
+
+
+BENCHES = {"kill": bench_chaos, "preempt": bench_preempt,
+           "straggler": bench_straggler}
+
+
+def _bench_scenarios(scenario: str, **kw):
+    """Run one scenario (or all), merging rows and summaries."""
+    names = list(BENCHES) if scenario == "all" else [scenario]
+    rows, summary = [], {}
+    for name in names:
+        r, s = BENCHES[name](**kw)
+        rows.extend(r)
+        summary[name] = s
+    if len(names) == 1:
+        return rows, summary[names[0]]
+    return rows, summary
+
+
 def _spawn(args_list, json_path, n_devices=N_NODES * DEVS_PER_NODE):
     """Re-exec the core in a subprocess with forced host devices so the
     recovery reshards are real multi-device collectives."""
@@ -299,7 +554,7 @@ def _spawn(args_list, json_path, n_devices=N_NODES * DEVS_PER_NODE):
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(here, "src"), here, env["PYTHONPATH"]])
     cmd = [sys.executable, "-m", "benchmarks.chaos_bench", "--core"]
-    cmd += args_list
+    cmd += list(args_list)
     if json_path:
         cmd += ["--json", json_path]
     r = subprocess.run(cmd, capture_output=True, text=True, env=env,
@@ -314,14 +569,16 @@ def _spawn(args_list, json_path, n_devices=N_NODES * DEVS_PER_NODE):
     return rows or None
 
 
-def run(smoke: bool = False, json_path: str | None = None):
+def run(smoke: bool = False, json_path: str | None = None,
+        scenario: str = "all"):
     """Entry point for ``benchmarks.run --only chaos``."""
-    args_list = ["--smoke"] if smoke else []
+    args_list = ["--scenario", scenario] + (["--smoke"] if smoke else [])
     rows = _spawn(args_list, json_path)
     if rows is not None:
         return rows
     # fallback: in-process (degraded: single-device reshards are aliases)
-    rows, summary = bench_chaos(
+    rows, summary = _bench_scenarios(
+        scenario,
         **({"steps": 4, "dim": 256, "sleep_s": 0.005} if smoke else {}))
     if json_path:
         with open(json_path, "w") as f:
@@ -336,6 +593,9 @@ def main():
                          "spawning parent after forcing host devices)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-friendly: fewer steps, smaller weights")
+    ap.add_argument("--scenario", default="all",
+                    choices=["kill", "preempt", "straggler", "all"],
+                    help="which chaos scenario(s) to run")
     ap.add_argument("--json", default=None,
                     help="write the summary dict to this path")
     args = ap.parse_args()
@@ -343,13 +603,14 @@ def main():
     from benchmarks.common import emit
     kw = {"steps": 4, "dim": 256, "sleep_s": 0.005} if args.smoke else {}
     if args.core:
-        rows, summary = bench_chaos(**kw)
+        rows, summary = _bench_scenarios(args.scenario, **kw)
         emit(rows)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(summary, f, indent=2)
         return
-    rows = run(smoke=args.smoke, json_path=args.json)
+    rows = run(smoke=args.smoke, json_path=args.json,
+               scenario=args.scenario)
     emit(rows)
 
 

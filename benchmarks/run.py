@@ -45,7 +45,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "moe": moe_bench.run,
         "pipeline": lambda: pipeline_bench.run(smoke=args.fast),
-        "chaos": lambda: chaos_bench.run(smoke=args.fast),
+        "chaos": lambda: chaos_bench.run(smoke=args.fast, scenario="all"),
     }
     only = args.only.split(",") if args.only else list(benches)
 

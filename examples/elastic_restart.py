@@ -1,16 +1,24 @@
-"""Elastic fault tolerance demo: survive a host loss *mid-run*, without a
-restart, then grow the cluster back and replan.
+"""Elastic fault tolerance demo: migrate off a host on a *preemption
+notice* with zero aborted calls, survive an unannounced host loss
+*mid-run* without a restart, then grow the cluster back and replan.
 
-A deterministic ``FaultInjector`` kills simulated host 1 in the middle of
-the second PPO iteration.  The runtime reacts in-run (docs/ARCHITECTURE.md,
-"Fault tolerance & elasticity"): it drains the in-flight window, masks the
-dead host out, re-searches a plan for the surviving cluster
-(``search.replan_on_topology``, seeded with the old plan's projection),
-recovers weights — live reshard when a data-parallel replica survived,
-checkpoint restore otherwise — and resumes from the last retired
-iteration, replaying only the calls that had not completed.  Afterwards
-``add_hosts`` declares a host *gain*, consumed at the next retirement: the
-mesh grows and the plan is re-searched onto it.
+Act 1 — graceful: a ``FaultInjector.notice`` announces that host 1 will
+be preempted (a spot/maintenance warning with a deadline).  The runtime
+keeps running, replans on the *same* cluster avoiding the doomed host,
+drains in-flight calls normally, live-migrates params + optimizer states
+off the host, and retires it — no call aborts, no checkpoint touched
+(recovery ``mode == "migrate"``).
+
+Act 2 — reactive: a ``kill_host`` fires with no warning in the middle of
+the second PPO iteration.  The runtime reacts in-run
+(docs/ARCHITECTURE.md, "Fault tolerance & elasticity"): it drains the
+in-flight window, masks the dead host out, re-searches a plan for the
+surviving cluster (``search.replan_on_topology``, seeded with the old
+plan's projection), recovers weights — live reshard when a data-parallel
+replica survived, checkpoint restore otherwise — and resumes from the
+last retired iteration, replaying only the calls that had not completed.
+Afterwards ``add_hosts`` declares a host *gain*, consumed at the next
+retirement: the mesh grows and the plan is re-searched onto it.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -34,11 +42,26 @@ def main():
                                checkpoint_every=1, checkpoint_dir=ckpt_dir,
                                ppo=PPOHyperparameters(n_minibatches=2))
 
+    # ---- act 1: preemption notice — migrate, never abort ----------------
+    inj = FaultInjector().notice(1, deadline_s=120.0,
+                                 at_call="reward_inf", at_iteration=1)
+    cluster = Cluster(n_nodes=2, devs_per_node=8)
+    pre = RLHFExperiment(actor, actor, cluster, exp_cfg,
+                         fault_injector=inj)
+    pre.run(jax.random.PRNGKey(0), steps=3)
+    mig = pre.engine.recoveries[0]
+    print("preemption notice on host 1 (120s deadline) -> "
+          f"mode={mig['mode']}, aborted_calls={pre.engine.aborted_calls}, "
+          f"restore {mig['restore_s']:.3f}s, drain {mig['drain_s']:.3f}s, "
+          f"reshard {mig['reshard_s']:.3f}s ({mig['moved_bytes']} B moved)")
+    print(f"host retired; plan now avoids it "
+          f"({mig['surviving_devices']} surviving devices) — "
+          "zero aborts, zero checkpoint restores\n")
+
+    # ---- act 2: unannounced host loss — react in-run --------------------
     # chaos script: host 1 dies while reward inference of iteration 1 is
     # executing — deterministic, so every run of this demo is identical
     inj = FaultInjector().kill_host(1, at_call="reward_inf", at_iteration=1)
-
-    cluster = Cluster(n_nodes=2, devs_per_node=8)
     exp = RLHFExperiment(actor, actor, cluster, exp_cfg,
                          fault_injector=inj)
     print("initial plan (2x8 cluster):")

@@ -8,12 +8,19 @@ replans on the surviving cluster and reshards live weights onto the new
 plan.  This module holds the pieces that do not touch the event loop:
 
 * :class:`FaultInjector` — a scripted (deterministic, replayable) source of
-  faults: kill a simulated host mid-iteration, delay a call, or fail a call
-  transiently N times.  Injection happens inside the executor thread of the
-  matched call, exactly where a real device fault would surface.
+  faults: kill a simulated host mid-iteration, delay a call, fail a call
+  transiently N times, or deliver a *preemption notice* (the host will die
+  in ``deadline_s`` — a spot/maintenance eviction).  Injection happens
+  inside the executor thread of the matched call, exactly where a real
+  device fault would surface; notices never raise — they are queued and the
+  runtime polls :meth:`FaultInjector.take_notices`.
 * :class:`DeviceHealth` — which hosts of the *current logical cluster* are
-  dead, plus pending host gains; ``compact()`` renumbers the survivors into
-  a dense :class:`~repro.core.plan.Cluster` so successive failures compose.
+  dead, doomed (noticed, still serving), retired (migrated off before their
+  deadline), plus pending host gains; ``compact()`` renumbers the survivors
+  into a dense :class:`~repro.core.plan.Cluster` so successive failures
+  compose.  Retiring a host deliberately does NOT renumber: migration
+  happens under a live window whose in-flight calls hold device locks in
+  the current coordinates.
 * :class:`RetryPolicy` — configurable retry for transient call failures
   (max attempts, exponential backoff, per-call-type overrides, straggler
   deadline factor), replacing the engine's historical hardcoded single
@@ -38,8 +45,9 @@ from repro.core.dfg import base_name
 from repro.core.plan import Assignment, Cluster
 
 __all__ = [
-    "TransientError", "DeviceLostError", "TopologyEvent", "DeviceHealth",
-    "RetryPolicy", "FaultInjector", "replica_groups", "has_live_replica",
+    "TransientError", "DeviceLostError", "TopologyEvent", "PreemptionNotice",
+    "DeviceHealth", "RetryPolicy", "FaultInjector", "replica_groups",
+    "has_live_replica",
 ]
 
 
@@ -67,16 +75,32 @@ class DeviceLostError(RuntimeError):
 class TopologyEvent:
     """One topology change, in the cluster coordinates current at the time.
 
-    ``kind`` is "loss" or "gain"; ``nodes`` the affected logical node ids
-    (for gains: the ids the new hosts will occupy after ``compact()``)."""
+    ``kind`` is "loss", "gain", "notice" (a preemption notice: the nodes
+    will die soon but still serve — replans triggered by it must *avoid*
+    them without renumbering the cluster) or "retire" (a noticed host was
+    fully migrated off before its deadline); ``nodes`` the affected logical
+    node ids (for gains: the ids the new hosts will occupy after
+    ``compact()``)."""
 
     kind: str
     nodes: tuple[int, ...]
     at: float = 0.0
 
     def __post_init__(self):
-        if self.kind not in ("loss", "gain"):
+        if self.kind not in ("loss", "gain", "notice", "retire"):
             raise ValueError(f"unknown topology event kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionNotice:
+    """A scripted advance warning: ``node`` will be lost ``deadline_s``
+    seconds after ``at`` (monotonic).  Delivered by the injector's queue
+    (never raised) — real fleets surface these via a metadata endpoint or
+    SIGTERM long before the host actually dies."""
+
+    node: int
+    deadline_s: float
+    at: float = 0.0
 
 
 class DeviceHealth:
@@ -92,6 +116,8 @@ class DeviceHealth:
     def __init__(self, cluster: Cluster):
         self.cluster = cluster
         self.dead_nodes: set[int] = set()
+        self.doomed_nodes: set[int] = set()  # noticed, still serving
+        self.retired_nodes: set[int] = set()  # migrated off, ids kept stable
         self.pending_gain: int = 0
         self.events: list[TopologyEvent] = []
 
@@ -101,7 +127,35 @@ class DeviceHealth:
             raise ValueError(
                 f"node {node} outside cluster of {self.cluster.n_nodes}")
         self.dead_nodes.add(node)
+        self.doomed_nodes.discard(node)  # the notice, if any, came true
+        self.retired_nodes.discard(node)
         ev = TopologyEvent("loss", (node,), at=time.monotonic())
+        self.events.append(ev)
+        return ev
+
+    def notice(self, node: int, deadline_s: float) -> TopologyEvent:
+        """Record a preemption notice: ``node`` keeps serving but is doomed.
+        Replans triggered by the returned event must avoid it."""
+        if not (0 <= node < self.cluster.n_nodes):
+            raise ValueError(
+                f"node {node} outside cluster of {self.cluster.n_nodes}")
+        if node in self.dead_nodes:
+            raise ValueError(f"node {node} is already dead")
+        self.doomed_nodes.add(node)
+        ev = TopologyEvent("notice", (node,), at=time.monotonic())
+        self.events.append(ev)
+        return ev
+
+    def retire_host(self, node: int) -> TopologyEvent:
+        """A doomed host finished migrating: drop it from service *without*
+        renumbering the survivors (in-flight state holds current
+        coordinates).  ``compact()`` folds retired hosts out like dead
+        ones."""
+        if node not in self.doomed_nodes:
+            raise ValueError(f"node {node} was never noticed as doomed")
+        self.doomed_nodes.discard(node)
+        self.retired_nodes.add(node)
+        ev = TopologyEvent("retire", (node,), at=time.monotonic())
         self.events.append(ev)
         return ev
 
@@ -122,21 +176,30 @@ class DeviceHealth:
         return frozenset(d for n in self.dead_nodes
                          for d in range(n * m, (n + 1) * m))
 
+    def doomed_devices(self) -> frozenset[int]:
+        """Flat device ids of every doomed (noticed, still serving) host."""
+        m = self.cluster.devs_per_node
+        return frozenset(d for n in self.doomed_nodes
+                         for d in range(n * m, (n + 1) * m))
+
     @property
     def healthy(self) -> bool:
-        return not self.dead_nodes and self.pending_gain == 0
+        return (not self.dead_nodes and not self.doomed_nodes
+                and not self.retired_nodes and self.pending_gain == 0)
 
     # ------------------------------------------------------------ compaction
     def compact(self) -> tuple[Cluster, dict[int, int]]:
-        """Fold deaths and gains into a dense cluster.
+        """Fold deaths, retirements and gains into a dense cluster.
 
         Returns ``(new_cluster, node_map)`` where ``node_map`` renumbers
-        surviving old nodes to their new ids (dead nodes are absent; gained
-        nodes take the ids after the survivors).  Resets this health view
-        to all-healthy on the new cluster.
+        surviving old nodes to their new ids (dead and retired nodes are
+        absent; gained nodes take the ids after the survivors).  Resets
+        this health view to all-healthy on the new cluster.  Doomed (not
+        yet retired) nodes are kept — they are still serving.
         """
+        gone = self.dead_nodes | self.retired_nodes
         survivors = [n for n in range(self.cluster.n_nodes)
-                     if n not in self.dead_nodes]
+                     if n not in gone]
         n_new = len(survivors) + self.pending_gain
         if n_new < 1:
             raise RuntimeError("no hosts survive the topology change")
@@ -144,6 +207,9 @@ class DeviceHealth:
         new = dataclasses.replace(self.cluster, n_nodes=n_new)
         self.cluster = new
         self.dead_nodes = set()
+        self.doomed_nodes = {node_map[n] for n in self.doomed_nodes
+                             if n in node_map}
+        self.retired_nodes = set()
         self.pending_gain = 0
         return new, node_map
 
@@ -173,11 +239,11 @@ def has_live_replica(asg: Assignment, dead: frozenset,
 # ---------------------------------------------------------------- injection
 @dataclasses.dataclass
 class _Fault:
-    kind: str                       # "transient" | "delay" | "kill"
+    kind: str                       # "transient" | "delay" | "kill" | "notice"
     call: Optional[str] = None      # base call name; None matches any call
     at_iteration: Optional[int] = None  # absolute iteration; None = any
     times: int = 1                  # remaining firings
-    delay_s: float = 0.0
+    delay_s: float = 0.0            # for "notice": the preemption deadline
     nodes: tuple[int, ...] = ()
     message: str = "injected fault"
 
@@ -200,6 +266,7 @@ class FaultInjector:
         self._faults: list[_Fault] = []
         self._lock = threading.Lock()
         self.fired: list[tuple[str, str, int]] = []  # (kind, call, iter)
+        self._notices: list[PreemptionNotice] = []  # queued, never raised
 
     # ---------------------------------------------------------------- arming
     def fail_transient(self, call: Optional[str] = None, *, times: int = 1,
@@ -224,6 +291,25 @@ class FaultInjector:
             message=f"injected loss of host {node}"))
         return self
 
+    def notice(self, node: int, deadline_s: float, *,
+               at_call: Optional[str] = None,
+               at_iteration: Optional[int] = None):
+        """Arm a preemption notice: when the next matching call executes, a
+        :class:`PreemptionNotice` for ``node`` (dying in ``deadline_s``) is
+        *queued* — never raised; the call proceeds normally — for the
+        runtime to pick up via :meth:`take_notices`."""
+        self._faults.append(_Fault(
+            "notice", at_call, at_iteration, times=1, delay_s=deadline_s,
+            nodes=(node,),
+            message=f"preemption notice for host {node}"))
+        return self
+
+    def take_notices(self) -> list[PreemptionNotice]:
+        """Drain the queued preemption notices (oldest first)."""
+        with self._lock:
+            out, self._notices = self._notices, []
+        return out
+
     # --------------------------------------------------------------- firing
     def on_execute(self, call_name: str, iteration: int) -> None:
         """Called by the runtime in the executor thread of ``call_name`` at
@@ -245,6 +331,11 @@ class FaultInjector:
             if fault is None:
                 return
             self.fired.append((fault.kind, base, iteration))
+            if fault.kind == "notice":
+                self._notices.extend(
+                    PreemptionNotice(n, fault.delay_s, time.monotonic())
+                    for n in fault.nodes)
+                return
         if fault.kind == "delay":
             time.sleep(fault.delay_s)
             return

@@ -53,7 +53,23 @@ Fault tolerance & elasticity (core/fault.py + docs/ARCHITECTURE.md):
     parameters from the last good layout
   * per-call deadline = straggler-factor x estimator time (the factor comes
     from the retry policy when set, else the engine default); breaches
-    invoke ``on_straggler``
+    invoke ``on_straggler``, and with ``speculative_redispatch`` an
+    in-flight watchdog races a duplicate dispatch of the straggling call on
+    an idle mesh — first finisher wins, the loser runs out in the
+    background and is ignored.  Only idempotent call types
+    (``speculative_types``, default INFERENCE + GENERATE) are ever
+    duplicated, so first-finisher semantics cannot double-apply a TRAIN
+    step or disturb the version edges
+  * a *preemption notice* (``FaultInjector.notice`` / ``notify_preemption``)
+    is the proactive half of elasticity: the engine keeps running, replans
+    on the *same* cluster with the doomed host's meshes excluded (so no new
+    call is admitted onto them), lets the ordinary prefetch-chain
+    reallocation path walk every affected model's weights — and opt states —
+    onto survivor meshes underneath the ongoing compute, and retires the
+    host at the next safe point (an iteration retirement with no doomed
+    device busy): zero aborted calls, zero checkpoint restores
+    (``recoveries[].mode == "migrate"``).  A deadline that expires before
+    the drain completes degrades to the reactive host-loss path below
   * a ``DeviceLostError`` (host loss) is a *topology change*, not a retry:
     the window aborts at the next safe point (in-flight executor threads
     always run to completion so completed work is never re-run), dead
@@ -62,7 +78,9 @@ Fault tolerance & elasticity (core/fault.py + docs/ARCHITECTURE.md):
     cluster, live weights reshard onto it through ``parallel/realloc_exec``
     whenever any data-parallel replica of a model survives intact
     (``restore_models`` — checkpoint restore — is the fallback when every
-    replica died), and ``run()`` resumes from the last retired iteration,
+    replica died; optimizer states are triaged and recovered the same way,
+    as first-class sharded trees), and ``run()`` resumes from the last
+    retired iteration,
     replaying only the calls that had not completed (the carried done-set
     keeps TRAIN steps exactly-once and the version-edge guard intact)
   * ``add_hosts(k)`` declares device *gain*; it is consumed at the next
@@ -86,10 +104,11 @@ import time
 from typing import Any, Callable, Optional
 
 from repro.core import fault
-from repro.core.dfg import (DataflowGraph, FunctionCall, TRAIN, base_name,
-                            iteration_of, unroll_iterations)
+from repro.core.dfg import (DataflowGraph, FunctionCall, GENERATE, INFERENCE,
+                            TRAIN, base_name, iteration_of,
+                            unroll_iterations)
 from repro.core.estimator import CostModel
-from repro.core.plan import Assignment, ExecutionPlan
+from repro.core.plan import Assignment, ExecutionPlan, ParallelStrategy
 
 
 class _Aborted(Exception):
@@ -118,6 +137,9 @@ class ModelState:
     # in-flight prefetched reallocation:
     # (target assignment, ReshardTask, meta dict with "cross"/"sched")
     prefetch: Optional[tuple] = None
+    # where the optimizer state currently lives (set by the model's TRAIN
+    # calls; triaged and recovered alongside the params)
+    opt_assignment: Optional[Assignment] = None
 
 
 @dataclasses.dataclass
@@ -133,6 +155,8 @@ class CallRecord:
     realloc_bytes: int = 0  # bytes actually moved by the partial reshard
     prefetch_cross: bool = False  # hit on a prefetch spanning iterations
     attempts: int = 1  # executions including retries (retried == attempts > 1)
+    speculated: bool = False  # a duplicate was raced on an idle mesh
+    spec_won: bool = False  # ... and the duplicate finished first
 
 
 class RuntimeEngine:
@@ -140,8 +164,11 @@ class RuntimeEngine:
                  executors: dict[str, Callable], models: dict[str, ModelState],
                  *, cost_model: Optional[CostModel] = None,
                  sharding_for: Optional[Callable] = None,
+                 opt_sharding_for: Optional[Callable] = None,
                  straggler_factor: float = 10.0,
                  on_straggler: Optional[Callable] = None,
+                 speculative_redispatch: bool = False,
+                 speculative_types: Optional[tuple] = None,
                  prefetch_realloc: bool = True,
                  pipeline_depth: int = 1,
                  recalibrate_every: int = 0,
@@ -157,7 +184,18 @@ class RuntimeEngine:
         call; TRAIN executors mutate model_state.params/opt_state in place.
         ``sharding_for(model_name, assignment)`` -> dst sharding tree (or
         None to skip physical resharding, e.g. single-device tests).
+        ``opt_sharding_for(model_name, assignment)`` is the optimizer-state
+        analogue: when given, a model's opt state is resharded onto its
+        TRAIN call's assignment (and triaged/recovered alongside the
+        params); without it opt placement is tracked logically only.
         ``prefetch_realloc`` enables the overlapped-reallocation chains.
+
+        ``speculative_redispatch`` arms the in-flight straggler watchdog:
+        a call exceeding its deadline while an idle mesh exists races a
+        duplicate dispatch there; first finisher wins and the loser runs
+        out in the background, ignored.  Only call types in
+        ``speculative_types`` (default INFERENCE + GENERATE — the
+        idempotent ones) are ever duplicated; TRAIN keeps exactly-once.
 
         ``pipeline_depth`` is the default iteration window of ``run``: how
         many iterations of the concatenated graph may be in flight at once
@@ -191,8 +229,13 @@ class RuntimeEngine:
         self.models = models
         self.cost = cost_model
         self.sharding_for = sharding_for
+        self.opt_sharding_for = opt_sharding_for
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler or (lambda *a: None)
+        self.speculative_redispatch = speculative_redispatch
+        self.speculative_types = (tuple(speculative_types)
+                                  if speculative_types is not None
+                                  else (INFERENCE, GENERATE))
         self.prefetch_realloc = prefetch_realloc
         self.pipeline_depth = pipeline_depth
         self.recalibrate_every = recalibrate_every
@@ -208,7 +251,13 @@ class RuntimeEngine:
         self.topology_events: list[fault.TopologyEvent] = []
         self.prefetch_aborted = 0  # drained without folding into the cost model
         self.aborted_calls = 0
+        self.opt_state_resharded_bytes = 0
         self._pending_gain = 0
+        # node -> migration bookkeeping for hosts under a preemption notice
+        self._migrations: dict[int, dict] = {}
+        self._spec_busy: set[int] = set()  # devices claimed by duplicates
+        self._spec_tasks: list = []  # losing racers still running out
+        self._notice_queue: list = []  # notify_preemption() hand-offs
         self._fault: Optional[fault.DeviceLostError] = None
         self._abort_ev: Optional[asyncio.Event] = None
         self.recalibrations = 0
@@ -470,6 +519,331 @@ class RuntimeEngine:
             st.assignment = target
             return time.monotonic() - t0, False, False, moved
 
+    async def _maybe_reallocate_opt(self, call: FunctionCall) -> int:
+        """Move the call's optimizer state to the call's assignment (TRAIN
+        only).  Separate from ``_maybe_reallocate`` because that path
+        early-returns when the *params* are already placed — and a prefetch
+        hit bypasses its dispatch entirely — while the opt state has its own
+        placement lifecycle.  Returns bytes moved on the critical path."""
+        if call.call_type != TRAIN:
+            return 0
+        st = self.models[call.model_name]
+        if st.opt_state is None:
+            return 0
+        target = self._assignment_for(call.name)
+        if st.opt_assignment == target:
+            return 0
+        async with self._model_locks.setdefault(call.model_name,
+                                                asyncio.Lock()):
+            if st.opt_assignment == target:
+                return 0
+            moved = 0
+            if self.opt_sharding_for is not None:
+                dst = self.opt_sharding_for(call.model_name, target)
+                if dst is not None:
+                    await self._await_model_idle(call.model_name)
+                    from repro.parallel import realloc_exec
+                    loop = asyncio.get_running_loop()
+                    opt = st.opt_state
+
+                    def dispatch():
+                        task = realloc_exec.prefetch_reshard(opt, dst)
+                        st.opt_state = task.tree
+                        return task
+
+                    task = await loop.run_in_executor(None, dispatch)
+                    await loop.run_in_executor(None, task.wait)
+                    moved = task.moved_bytes
+                    self.opt_state_resharded_bytes += moved
+            # tracked logically even without physical resharding, so the
+            # recovery triage knows which mesh the opt state lives on
+            st.opt_assignment = target
+            return moved
+
+    # ------------------------------------------------ preemption migration
+    def notify_preemption(self, node: int, deadline_s: float):
+        """External preemption notice: host ``node`` will be reclaimed in
+        ``deadline_s`` seconds.  Consumed at the engine's next poll point;
+        the engine then drains and migrates instead of crashing."""
+        self._notice_queue.append(
+            fault.PreemptionNotice(node, deadline_s, time.monotonic()))
+
+    def _take_notices(self) -> list:
+        notes, self._notice_queue = list(self._notice_queue), []
+        if self.fault_injector is not None:
+            notes.extend(self.fault_injector.take_notices())
+        return notes
+
+    async def _poll_preemptions(self):
+        """Pick up newly delivered preemption notices and enforce the
+        deadlines of in-progress migrations (expiry degrades to the
+        reactive host-loss path via ``DeviceLostError``)."""
+        for note in self._take_notices():
+            await self._begin_migration(note)
+        self._check_doomed()
+
+    def _check_doomed(self):
+        now = time.monotonic()
+        expired = sorted(n for n, mig in self._migrations.items()
+                         if now > mig["deadline"])
+        if expired:
+            raise fault.DeviceLostError(
+                nodes=tuple(expired),
+                message=f"preemption deadline expired on host(s) {expired}")
+
+    async def _begin_migration(self, note):
+        """Start draining a noticed host: mark it doomed, replan on the
+        *same* cluster with its meshes excluded (no renumbering while
+        in-flight calls hold coordinate-bound locks), and drop any prefetch
+        targeting it.  Live weights then walk onto survivor meshes through
+        the ordinary reallocation path while compute continues."""
+        node = note.node
+        if node in self._migrations:
+            return
+        if self.health is None:
+            self.health = fault.DeviceHealth(self.plan.cluster)
+        if (node in self.health.dead_nodes
+                or node in self.health.retired_nodes):
+            return
+        t0 = time.monotonic()
+        event = self.health.notice(node, note.deadline_s)
+        self.topology_events.append(event)
+        mig = {"deadline": (note.at or t0) + note.deadline_s, "t0": t0,
+               "event": event, "replan_s": 0.0}
+        self._migrations[node] = mig
+        if self.replanner is not None:
+            tr = time.monotonic()
+            new_plan = self.replanner(self.plan.cluster, event)
+            mig["replan_s"] = time.monotonic() - tr
+            self.replan(new_plan)
+        # a prefetch dispatched toward the doomed host is dead weight:
+        # drain it (excluded from the realloc calibration) so the sync
+        # path reshards onto the survivor plan instead
+        doomed = self.health.doomed_devices()
+        m = self.plan.cluster.devs_per_node
+        for name, st in self.models.items():
+            pf = st.prefetch
+            if pf is not None and (pf[0].mesh.devices(m) & doomed):
+                await self._drain_prefetch(name, fold=False)
+
+    async def _finalize_migration(self):
+        """Retire drained hosts at a safe point (an iteration retirement
+        with no doomed device busy).  Any model whose params or opt state
+        still sit on a doomed mesh is force-resharded onto the survivor
+        plan first — so retirement never strands live state — then the
+        host leaves the health roster without renumbering and a
+        ``mode == "migrate"`` recovery record is written: zero aborted
+        calls, zero checkpoint restores."""
+        if not self._migrations or self.health is None:
+            return
+        doomed = self.health.doomed_devices()
+        m = self.plan.cluster.devs_per_node
+        # safe point: no in-flight call may hold a doomed device
+        for d in doomed:
+            lk = self._dev_locks.get(d)
+            if lk is not None and lk.locked():
+                return
+        t0 = time.monotonic()
+        moved = 0
+        import jax
+        for model_name, calls in self._model_call_chains().items():
+            st = self.models.get(model_name)
+            if st is None or not calls:
+                continue
+            on_doomed = (
+                (st.assignment is not None
+                 and st.assignment.mesh.devices(m) & doomed)
+                or (st.opt_assignment is not None
+                    and st.opt_assignment.mesh.devices(m) & doomed))
+            if not on_doomed:
+                continue
+            await self._drain_prefetch(model_name, fold=False)
+            async with self._model_locks.setdefault(model_name,
+                                                    asyncio.Lock()):
+                await self._await_model_idle(model_name)
+                loop = asyncio.get_running_loop()
+                from repro.parallel import realloc_exec
+                target = self._assignment_for(calls[0].name)
+                if (st.assignment is not None
+                        and st.assignment.mesh.devices(m) & doomed
+                        and jax.tree.leaves(st.params)):
+                    dst = (self.sharding_for(model_name, target)
+                           if self.sharding_for is not None else None)
+                    if dst is not None:
+                        params = st.params
+
+                        def dispatch():
+                            task = realloc_exec.prefetch_reshard(params, dst)
+                            st.params = task.tree
+                            return task
+
+                        task = await loop.run_in_executor(None, dispatch)
+                        await loop.run_in_executor(None, task.wait)
+                        moved += task.moved_bytes
+                    st.assignment = target
+                if (st.opt_assignment is not None
+                        and st.opt_assignment.mesh.devices(m) & doomed):
+                    train = [c for c in calls if c.call_type == TRAIN]
+                    opt_target = (self._assignment_for(train[0].name)
+                                  if train else target)
+                    dst = (self.opt_sharding_for(model_name, opt_target)
+                           if self.opt_sharding_for is not None else None)
+                    if dst is not None and st.opt_state is not None:
+                        opt = st.opt_state
+
+                        def dispatch_opt():
+                            task = realloc_exec.prefetch_reshard(opt, dst)
+                            st.opt_state = task.tree
+                            return task
+
+                        task = await loop.run_in_executor(None, dispatch_opt)
+                        await loop.run_in_executor(None, task.wait)
+                        moved += task.moved_bytes
+                        self.opt_state_resharded_bytes += task.moved_bytes
+                    st.opt_assignment = opt_target
+        reshard_s = time.monotonic() - t0
+        now = time.monotonic()
+        for node in sorted(self._migrations):
+            mig = self._migrations.pop(node)
+            ev = self.health.retire_host(node)
+            self.topology_events.append(ev)
+            self.recoveries.append({
+                "mode": "migrate",
+                "dead_nodes": [node],
+                "lost_models": [],
+                "resumed_iteration": self.iterations_done,
+                "surviving_devices": self.plan.cluster.size
+                - len(self.health.dead_devices())
+                - len(self.health.doomed_devices()),
+                "drain_s": now - mig["t0"],
+                "replan_s": mig["replan_s"],
+                "restore_s": 0.0,
+                "reshard_s": reshard_s,
+                "moved_bytes": moved,
+                # recovery *work* only — the drain overlaps live compute
+                "total_s": mig["replan_s"] + reshard_s,
+            })
+
+    # ------------------------------------------- speculative re-dispatch
+    def _idle_assignment(self, call: FunctionCall) -> Optional[Assignment]:
+        """Largest legal mesh with every device idle — unlocked, healthy,
+        not doomed/retired, not already claimed by another duplicate, and
+        disjoint from the straggling call's own mesh.  None when the
+        cluster has no spare capacity to race on."""
+        m = self.plan.cluster.devs_per_node
+        bad = set(self._spec_busy)
+        bad.update(self._mesh_devs[call.name])
+        if self.health is not None:
+            bad.update(self.health.dead_devices())
+            bad.update(self.health.doomed_devices())
+            for n in self.health.retired_nodes:
+                bad.update(range(n * m, (n + 1) * m))
+        best = None
+        for mesh in self.plan.cluster.legal_meshes():
+            devs = mesh.devices(m)
+            if devs & bad:
+                continue
+            if any(self._dev_locks.get(d) is not None
+                   and self._dev_locks[d].locked() for d in devs):
+                continue
+            if best is None or mesh.size > best.size:
+                best = mesh
+        if best is None:
+            return None
+        return Assignment(best, ParallelStrategy(best.size, 1, 1, 1))
+
+    async def _run_duplicate(self, call: FunctionCall, fn, inputs,
+                             spec_asg: Assignment):
+        """Execute the duplicate on the idle mesh.  The primary is still
+        computing on the source buffers, so the params are *cloned*
+        (non-donating reshard) onto the spare mesh; the duplicate never
+        takes device locks — the ``_spec_busy`` claim plus the idle scan
+        keep it off every planned mesh — and skips the fault injector
+        (faults are scripted against primary executions)."""
+        m = self.plan.cluster.devs_per_node
+        devs = spec_asg.mesh.devices(m)
+        self._spec_busy |= devs
+        try:
+            st = self.models[call.model_name]
+            loop = asyncio.get_running_loop()
+            params = st.params
+            if self.sharding_for is not None:
+                dst = self.sharding_for(call.model_name, spec_asg)
+                if dst is not None:
+                    from repro.parallel import realloc_exec
+                    params = await loop.run_in_executor(
+                        None, realloc_exec.clone_reshard, st.params, dst)
+            dup_ms = dataclasses.replace(st, params=params,
+                                         assignment=spec_asg,
+                                         prefetch=None)
+            self._begin_use(call.model_name)
+            try:
+                return await loop.run_in_executor(None, fn, dup_ms, inputs)
+            finally:
+                await self._end_use(call.model_name)
+        finally:
+            self._spec_busy -= devs
+
+    def _reap_loser(self, task: asyncio.Task):
+        """Let the losing racer run out in the background and swallow its
+        result.  A device loss inside the loser still matters — it is a
+        topology change — so only that escalates."""
+        self._spec_tasks.append(task)
+
+        def _done(tk: asyncio.Task):
+            if tk.cancelled():
+                return
+            err = tk.exception()
+            if isinstance(err, fault.DeviceLostError):
+                self.aborted_calls += 1
+                self._signal_fault(err)
+
+        task.add_done_callback(_done)
+
+    async def _execute_speculative(self, call: FunctionCall, execute,
+                                   fn, inputs, deadline, spec: dict):
+        """Race a duplicate dispatch against a straggling primary.  The
+        watchdog arms at the call's deadline; past it, if an idle mesh
+        exists, the duplicate launches there and the first clean finisher
+        wins.  Restricted to idempotent call types — a re-run returns the
+        same outputs and mutates nothing — so first-finisher semantics
+        cannot double-apply state."""
+        if (not self.speculative_redispatch or deadline is None
+                or call.call_type not in self.speculative_types):
+            return await execute()
+        primary = asyncio.ensure_future(execute())
+        try:
+            done, _ = await asyncio.wait({primary}, timeout=deadline)
+            if done:
+                return primary.result()
+            spec_asg = self._idle_assignment(call)
+            if spec_asg is None:
+                return await primary
+            dup = asyncio.ensure_future(
+                self._run_duplicate(call, fn, inputs, spec_asg))
+            spec["dispatched"] = True
+        except asyncio.CancelledError:
+            primary.cancel()
+            raise
+        try:
+            await asyncio.wait({primary, dup},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if primary.done():
+                # primary preferred on a tie: its outputs are the ones the
+                # deterministic no-speculation schedule would have produced
+                self._reap_loser(dup)
+                return primary.result()
+            if dup.exception() is None:
+                spec["won"] = True
+                self._reap_loser(primary)
+                return dup.result()
+            # duplicate errored: fall back to the primary
+            return await primary
+        except asyncio.CancelledError:
+            primary.cancel()
+            dup.cancel()
+            raise
+
     # ------------------------------------------------------------- dispatch
     async def _locks_for(self, name: str):
         locks = []
@@ -538,6 +912,9 @@ class RuntimeEngine:
                               intra: dict[str, list[str]],
                               cross: dict[str, list[str]],
                               done_keys: Optional[set] = None):
+        # preemption notices are consumed before the call binds to a mesh:
+        # a replan here keeps new admissions off the doomed host
+        await self._poll_preemptions()
         for p in intra[call.name]:
             await self._wait_dep(done[f"{p}@{t}"])
         if t > 0:  # version edges into the previous iteration
@@ -551,6 +928,7 @@ class RuntimeEngine:
             self._check_abort()
             realloc_s, prefetch_hit, cross_hit, moved = \
                 await self._maybe_reallocate(call)
+            moved += await self._maybe_reallocate_opt(call)
             self._check_abort()
             policy = self.retry_policy.for_call_type(call.call_type)
             factor = (policy.straggler_factor
@@ -583,10 +961,12 @@ class RuntimeEngine:
                     await self._end_use(call.model_name)
 
             attempts = 0
+            spec = {"dispatched": False, "won": False}
             while True:
                 attempts += 1
                 try:
-                    out = await execute()
+                    out = await self._execute_speculative(
+                        call, execute, fn, inputs, deadline, spec)
                     break
                 except fault.DeviceLostError as err:
                     # topology change, not a retryable failure: escalate
@@ -609,7 +989,8 @@ class RuntimeEngine:
                     await self._maybe_reallocate(call)
             retried = attempts > 1
             t1 = time.monotonic()
-            straggled = deadline is not None and (t1 - t0) > deadline
+            straggled = (spec["dispatched"]
+                         or (deadline is not None and (t1 - t0) > deadline))
             if straggled:
                 self.on_straggler(call.name, t1 - t0, deadline)
             if call.call_type == TRAIN:
@@ -619,7 +1000,8 @@ class RuntimeEngine:
                 call.name, t0, t1, realloc_s, straggled, retried,
                 prefetch_hit, iteration=self._iter_base + t,
                 realloc_bytes=moved, prefetch_cross=cross_hit,
-                attempts=attempts))
+                attempts=attempts, speculated=spec["dispatched"],
+                spec_won=spec["won"]))
         finally:
             for lk in reversed(locks):
                 lk.release()
@@ -700,6 +1082,11 @@ class RuntimeEngine:
                         lambda: state["failed"] or state["retired"] == t)
                     if state["failed"]:
                         return
+                    # safe point: retire drained (preemption-noticed) hosts
+                    # BEFORE the pool pops — a deadline expiry raised here
+                    # replays this retirement cleanly after recovery
+                    await self._poll_preemptions()
+                    await self._finalize_migration()
                     pool = pools.pop(t)
                     if keep_pools:
                         results[t] = pool
@@ -786,6 +1173,10 @@ class RuntimeEngine:
                     tk.cancel()
             await asyncio.gather(*prefetchers, *iter_tasks,
                                  return_exceptions=True)
+            # losing speculative racers run out before the loop (and its
+            # executor) tears down — their threads must not outlive it
+            spec_tasks, self._spec_tasks = self._spec_tasks, []
+            await asyncio.gather(*spec_tasks, return_exceptions=True)
             if self._fault is not None:
                 # abort path: drain every in-flight prefetch now, while
                 # the loop's executor is still alive, and keep their
@@ -972,6 +1363,9 @@ class RuntimeEngine:
         for n in err.nodes:
             if n not in self.health.dead_nodes:
                 self.health.mark_host_dead(n)
+            # an in-progress migration for a node that actually died is
+            # moot — the reactive path takes over from here
+            self._migrations.pop(n, None)
         event = fault.TopologyEvent("loss", tuple(err.nodes),
                                     at=time.monotonic())
         dead = self.health.dead_devices()
@@ -983,19 +1377,31 @@ class RuntimeEngine:
                 continue  # paramless model: nothing to recover
             self._drain_prefetch_sync(name)  # belt-and-braces; see finally
             asg = st.assignment
-            if asg is None or not (asg.mesh.devices(m) & dead):
-                continue  # never materialized, or untouched by the loss
-            if not fault.has_live_replica(asg, dead, m):
+            params_lost = (asg is not None and (asg.mesh.devices(m) & dead)
+                           and not fault.has_live_replica(asg, dead, m))
+            # opt states are first-class sharded trees: a TRAIN step with
+            # live params but lost moments would silently corrupt training
+            oasg = st.opt_assignment
+            opt_lost = (oasg is not None
+                        and bool(jax.tree.leaves(st.opt_state))
+                        and (oasg.mesh.devices(m) & dead)
+                        and not fault.has_live_replica(oasg, dead, m))
+            if params_lost or opt_lost:
                 lost.append(name)
-        surviving, _node_map = self.health.compact()
+        surviving, node_map = self.health.compact()
         t0 = time.monotonic()
         new_plan = self.replanner(surviving, event)
         replan_s = time.monotonic() - t0
         self.replan(new_plan)
+        # surviving migrations (other noticed hosts) renumber with the mesh
+        self._migrations = {node_map[n]: mig
+                            for n, mig in self._migrations.items()
+                            if n in node_map}
         for st in self.models.values():
             # old assignments are in dead coordinates; every model
             # reshards onto the new plan before its next call
             st.assignment = None
+            st.opt_assignment = None
         restore_s = 0.0
         if lost:
             if self.restore_models is None:
@@ -1037,13 +1443,27 @@ class RuntimeEngine:
                 continue
             target = self._assignment_for(calls[0].name)
             dst = self.sharding_for(model_name, target)
-            if dst is None:
-                continue
-            task = realloc_exec.prefetch_reshard(st.params, dst)
-            st.params = task.tree
-            task.wait()
-            moved += task.moved_bytes
-            st.assignment = target
+            if dst is not None:
+                task = realloc_exec.prefetch_reshard(st.params, dst)
+                st.params = task.tree
+                task.wait()
+                moved += task.moved_bytes
+                st.assignment = target
+            # recover the opt state live too: it lands on the model's
+            # TRAIN assignment, the layout its next train step expects
+            if (self.opt_sharding_for is not None
+                    and jax.tree.leaves(st.opt_state)):
+                train = [c for c in calls if c.call_type == TRAIN]
+                opt_target = (self._assignment_for(train[0].name)
+                              if train else target)
+                odst = self.opt_sharding_for(model_name, opt_target)
+                if odst is not None:
+                    task = realloc_exec.prefetch_reshard(st.opt_state, odst)
+                    st.opt_state = task.tree
+                    task.wait()
+                    moved += task.moved_bytes
+                    self.opt_state_resharded_bytes += task.moved_bytes
+                    st.opt_assignment = opt_target
         return time.monotonic() - t0, moved
 
     def stats(self) -> dict:
@@ -1075,6 +1495,14 @@ class RuntimeEngine:
             "recalibrations": getattr(self, "recalibrations", 0),
             "replans": getattr(self, "replans", 0),
             "recoveries": len(getattr(self, "recoveries", [])),
+            "preemption_migrations": sum(
+                1 for r in getattr(self, "recoveries", [])
+                if r.get("mode") == "migrate"),
+            "speculative_dispatches": sum(r.speculated
+                                          for r in self.records),
+            "speculative_wins": sum(r.spec_won for r in self.records),
+            "opt_state_resharded_bytes": getattr(
+                self, "opt_state_resharded_bytes", 0),
             "aborted_calls": getattr(self, "aborted_calls", 0),
             "prefetch_aborted": getattr(self, "prefetch_aborted", 0),
             "calls": calls,

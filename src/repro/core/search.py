@@ -99,18 +99,23 @@ def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
                 max_candidates: Optional[int] = None,
                 extra_seeds: Optional[list] = None,
                 pipeline_iters: int = 1,
+                cands: Optional[dict] = None,
                 on_improve: Optional[Callable] = None) -> SearchResult:
     """``extra_seeds``: known-good plans (e.g. the symmetric heuristic) that
     are part of the search space; they are evaluated up front so the returned
     plan is never worse than the best seed.  ``pipeline_iters`` > 1 optimizes
     the steady-state over the paper's concatenated multi-iteration graph
-    (cross-iteration overlap of frozen-model inference)."""
+    (cross-iteration overlap of frozen-model inference).  ``cands``
+    overrides the per-call candidate lists — the caller's filter (e.g.
+    ``replan_on_topology(avoid_nodes=...)``) then bounds every proposal,
+    not just the chain's start."""
     from repro.core.dfg import unroll_iterations
     rng = random.Random(seed)
     mem_cap = mem_cap or cluster.chip.hbm_bytes
     unrolled = (unroll_iterations(dfg, pipeline_iters)
                 if pipeline_iters > 1 else None)
-    cands = candidate_assignments(dfg, cluster, max_candidates, rng)
+    if cands is None:
+        cands = candidate_assignments(dfg, cluster, max_candidates, rng)
     space = 1.0
     for c in dfg.calls:
         space *= max(len(cands[c.name]), 1)
@@ -267,8 +272,10 @@ def replan_on_topology(dfg: DataflowGraph, cluster: Cluster, cost: CostModel,
                        iters: int = 60, seed: int = 0,
                        pipeline_iters: int = 1,
                        mem_cap: Optional[float] = None,
-                       max_candidates: Optional[int] = None) -> ExecutionPlan:
-    """Fast plan search for an elastic topology change (host loss or gain).
+                       max_candidates: Optional[int] = None,
+                       avoid_nodes: tuple[int, ...] = ()) -> ExecutionPlan:
+    """Fast plan search for an elastic topology change (host loss, gain, or
+    preemption notice).
 
     Recovery sits on the critical path of a live run, so this is a *short*
     MCMC chain seeded with the projection of the previous plan onto the
@@ -277,15 +284,32 @@ def replan_on_topology(dfg: DataflowGraph, cluster: Cluster, cost: CostModel,
     their greedy per-call optimum on the new cluster.  The seed is part of
     the search space, so the returned plan is never worse than the
     projection under the cost model.
+
+    ``avoid_nodes`` serves the *proactive* path: on a preemption notice the
+    cluster is unchanged (the doomed host still serves) but no candidate —
+    and no kept-verbatim projection — may touch its devices; the search
+    runs over the filtered candidate lists, so every proposal avoids the
+    doomed host too.
     """
+    m = cluster.devs_per_node
+    avoid_devs = frozenset(d for n in avoid_nodes
+                           for d in range(n * m, (n + 1) * m))
     cands = candidate_assignments(dfg, cluster, max_candidates,
                                   random.Random(seed))
+    if avoid_devs:
+        cands = {name: [a for a in lst
+                        if not (a.mesh.devices(m) & avoid_devs)]
+                 for name, lst in cands.items()}
+        if any(not lst for lst in cands.values()):
+            raise ValueError(
+                f"no candidate assignments avoid nodes {sorted(avoid_nodes)}")
     seeds = []
     if base_plan is not None:
         asg = {}
         for call in dfg.calls:
             a = base_plan.assignments.get(call.name)
-            if a is not None and a.mesh.fits(cluster):
+            if (a is not None and a.mesh.fits(cluster)
+                    and not (a.mesh.devices(m) & avoid_devs)):
                 asg[call.name] = a
                 continue
             best, best_t = None, math.inf
@@ -298,7 +322,8 @@ def replan_on_topology(dfg: DataflowGraph, cluster: Cluster, cost: CostModel,
             seeds.append(ExecutionPlan(asg, cluster))
     res = mcmc_search(dfg, cluster, cost, iters=iters, seed=seed,
                       extra_seeds=seeds, pipeline_iters=pipeline_iters,
-                      mem_cap=mem_cap, max_candidates=max_candidates)
+                      mem_cap=mem_cap, max_candidates=max_candidates,
+                      cands=cands)
     return res.best_plan
 
 

@@ -182,5 +182,16 @@ def prefetch_reshard(tree, dst_sharding_tree, *,
                        n_moved, n_aliased)
 
 
+def clone_reshard(tree, dst_sharding_tree):
+    """Non-donating copy of ``tree`` onto ``dst_sharding_tree``.
+
+    The source stays valid — required by the runtime's speculative
+    straggler re-dispatch, where the original call is still computing on
+    the source buffers while a duplicate races it on an idle mesh.  Leaves
+    already laid out as requested alias as usual (they are read-only for
+    both racers)."""
+    return reshard(tree, dst_sharding_tree, donate=False)
+
+
 def realloc_bytes(tree) -> int:
     return sum(_leaf_bytes(l) for l in jax.tree.leaves(tree))

@@ -95,6 +95,11 @@ class ExperimentConfig:
         default_factory=FLT.RetryPolicy)
     max_recoveries: int = 2
     replan_iters: int = 60
+    # speculative straggler re-dispatch (RuntimeEngine): race a duplicate
+    # of a straggling call on an idle mesh, first finisher wins.  The
+    # experiment restricts duplication to INFERENCE — actor_gen folds a
+    # stateful RNG split, so a GENERATE re-run is not idempotent here.
+    speculative_redispatch: bool = False
 
 
 class RLHFExperiment:
@@ -130,6 +135,10 @@ class RLHFExperiment:
             else:
                 plan = heuristic_plan(self.graph, cluster, self.cost)
         self.plan = plan
+        # the trainable set, derived from the dataflow graph's TRAIN calls
+        # (single source of truth for checkpoint/restore/recovery paths)
+        self._trainable = tuple(sorted({c.model_name for c in self.graph.calls
+                                        if c.call_type == DFG.TRAIN}))
         self._build_models()
         self._build_executors()
         candidates = []
@@ -148,7 +157,10 @@ class RLHFExperiment:
                                     fault_injector=fault_injector,
                                     replanner=self._replan_on_topology,
                                     restore_models=self._restore_lost,
-                                    max_recoveries=exp.max_recoveries)
+                                    max_recoveries=exp.max_recoveries,
+                                    speculative_redispatch=(
+                                        exp.speculative_redispatch),
+                                    speculative_types=(DFG.INFERENCE,))
         self.iteration = 0
         self.ckpt = None
         if exp.checkpoint_every > 0:
@@ -297,11 +309,17 @@ class RLHFExperiment:
         projection so surviving assignments tend to stay put (their
         parameters then need no move at all)."""
         from repro.core.search import replan_on_topology
+        notice = getattr(event, "kind", None) == "notice"
         plan = replan_on_topology(
             self.graph, cluster, self.cost, base_plan=self.plan,
             iters=self.exp.replan_iters, seed=self.exp.seed,
-            pipeline_iters=max(self.exp.pipeline_depth, 1))
-        self.cluster = cluster
+            pipeline_iters=max(self.exp.pipeline_depth, 1),
+            avoid_nodes=tuple(event.nodes) if notice else ())
+        if not notice:
+            # a preemption notice plans on the SAME cluster (the doomed
+            # host is excluded, not renumbered away — it is still up and
+            # draining); only real loss/gain resizes the cluster
+            self.cluster = cluster
         self.plan = plan
         return plan
 
@@ -317,7 +335,7 @@ class RLHFExperiment:
         template = {}
         for name in lost:
             template[name] = self.models[name].params
-            if name in ("actor", "critic"):
+            if name in self._trainable:
                 template[f"{name}_opt"] = self.models[name].opt_state
         self.ckpt.wait()
         _step, trees, _extra = self.ckpt.restore(template)
@@ -339,7 +357,7 @@ class RLHFExperiment:
     # -------------------------------------------------------- checkpointing
     def _checkpoint_trees(self) -> dict:
         trees = {name: ms.params for name, ms in self.models.items()}
-        for name in ("actor", "critic"):
+        for name in self._trainable:
             trees[f"{name}_opt"] = self.models[name].opt_state
         return trees
 
@@ -356,7 +374,7 @@ class RLHFExperiment:
         step, trees, extra = self.ckpt.restore(self._checkpoint_trees(), step)
         for name, ms in self.models.items():
             ms.params = trees[name]
-        for name in ("actor", "critic"):
+        for name in self._trainable:
             self.models[name].opt_state = trees[f"{name}_opt"]
         self.iteration = int(extra.get("iteration", step))
         return self.iteration

@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 # --------------------------------------------------------------- toy harness
 
-def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
+def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4, opt=False):
     """PPO-shaped 4-call toy on a logical 2x2 cluster with deterministic,
     placement-independent train updates (x -> x*0.5 + r): weights after k
     iterations are an exact function of the retired call sequence, so
@@ -43,7 +43,14 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
     ``actor_nodes="full"`` puts gen on the full mesh dp=4 (a replica
     survives any single-host loss -> live recovery); ``actor_nodes=1`` pins
     the actor entirely to node 1 (killing node 1 loses every replica ->
-    checkpoint fallback).
+    checkpoint fallback); ``actor_nodes="split"`` keeps gen on the full
+    mesh but trains on node 1 only — params survive a node-1 loss, the
+    opt state does not.
+
+    ``opt=True`` gives actor/critic optimizer-moment trees and a train
+    update that folds the moment into the weights (m -> m*0.9 + r;
+    x -> x*0.5 + m): stale or lost moments corrupt the weights
+    observably, so bit-identity also certifies opt-state recovery.
     """
     cluster = Cluster(n_nodes=2, devs_per_node=2, chip=hw.HOST_CPU)
     w = Workload(2, 4, 4)
@@ -65,6 +72,11 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
         # dp=4 on the full mesh: each device is one replica group
         gen_asg = Assignment(full, ParallelStrategy(4, 1, 1, 1))
         atrain_asg = Assignment(node0, ParallelStrategy(1, 2, 1, 1))
+    elif actor_nodes == "split":
+        # params replicated on the full mesh, but the opt state (born on
+        # the TRAIN assignment) lives only on node 1
+        gen_asg = Assignment(full, ParallelStrategy(4, 1, 1, 1))
+        atrain_asg = Assignment(node1, ParallelStrategy(1, 2, 1, 1))
     else:
         # actor lives only on node 1 -> node-1 loss kills every replica
         gen_asg = Assignment(node1, ParallelStrategy(2, 1, 1, 1))
@@ -84,10 +96,15 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
             return {"w": sh}
         return None
 
+    def _opt(v=0.0):
+        return {"w": jnp.full((dim, dim), v, jnp.float32)} if opt else None
+
     models = {
-        "actor": ModelState({"w": jnp.ones((dim, dim), jnp.float32)}),
+        "actor": ModelState({"w": jnp.ones((dim, dim), jnp.float32)},
+                            _opt()),
         "reward": ModelState({}),
-        "critic": ModelState({"w": jnp.full((dim, dim), 2.0, jnp.float32)}),
+        "critic": ModelState({"w": jnp.full((dim, dim), 2.0, jnp.float32)},
+                             _opt()),
     }
     counts = {}
 
@@ -109,7 +126,13 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
             time.sleep(sleep_s)
             bump(name)
             r = float(inputs["r"])
-            ms.params = jax.tree.map(lambda x: x * 0.5 + r, ms.params)
+            if opt:
+                ms.opt_state = jax.tree.map(lambda m: m * 0.9 + r,
+                                            ms.opt_state)
+                ms.params = jax.tree.map(lambda x, m: x * 0.5 + m,
+                                         ms.params, ms.opt_state)
+            else:
+                ms.params = jax.tree.map(lambda x: x * 0.5 + r, ms.params)
             return {out_key: r}
         return train
 
@@ -121,7 +144,15 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
         """Hand-rolled elastic replan for the toy (its calls carry no model
         config, so the real search is exercised in test_rlhf/chaos_bench):
         everything data-parallel on the resized full mesh, actor trains
-        tensor-parallel so the gen->train layout flip stays live."""
+        tensor-parallel so the gen->train layout flip stays live.  A
+        preemption *notice* plans on the same cluster with node 1 (the
+        only node the tests ever notice) excluded."""
+        if event.kind == "notice":
+            mesh = DeviceMesh(0, 1, 0, 2)
+            dp = Assignment(mesh, ParallelStrategy(2, 1, 1, 1))
+            tp = Assignment(mesh, ParallelStrategy(1, 2, 1, 1))
+            return ExecutionPlan({"gen": dp, "rew": dp, "atrain": tp,
+                                  "ctrain": dp}, new_cluster)
         nfull = new_cluster.full_mesh()
         n = nfull.size
         dp = Assignment(nfull, ParallelStrategy(n, 1, 1, 1))
@@ -133,13 +164,16 @@ def _toy(*, actor_nodes="full", sleep_s=0.01, dim=4):
 
 
 def _leaves(ms):
-    return [np.asarray(x) for x in jax.tree.leaves(ms.params)]
+    # params AND opt moments: bit-identity covers the full trainable state
+    return [np.asarray(x)
+            for x in jax.tree.leaves((ms.params, ms.opt_state))]
 
 
 def _reference_weights(steps, **kw):
     dfg, plan, executors, models, sharding_for, replanner, _ = _toy(**kw)
     eng = RuntimeEngine(dfg, plan, executors, models,
-                        sharding_for=sharding_for)
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for)
     eng.run(lambda t: {"prompts": t}, steps=steps)
     return _leaves(models["actor"]), _leaves(models["critic"])
 
@@ -309,6 +343,267 @@ def test_device_gain_grows_plan_at_retirement():
     gains = [e for e in eng.topology_events if e.kind == "gain"]
     assert len(gains) == 1 and gains[0].nodes == (2,)
     assert eng.iterations_done == 2
+
+
+# --------------------------------------------- preemption-notice migration
+
+def test_preemption_notice_migrates_without_aborts():
+    """A notice with a generous deadline: zero aborted calls, zero
+    checkpoint restores, a ``migrate`` recovery record, the plan moved off
+    the doomed host without renumbering, and bit-identical weights."""
+    ref_actor, ref_critic = _reference_weights(3)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().notice(1, 30.0, at_call="rew", at_iteration=1)
+
+    def never_restore(lost):
+        raise AssertionError(f"checkpoint restore used for {lost} "
+                             "during a migration")
+
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner,
+                        restore_models=never_restore)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    assert eng.aborted_calls == 0
+    assert len(eng.recoveries) == 1
+    rec = eng.recoveries[0]
+    assert rec["mode"] == "migrate"
+    assert rec["dead_nodes"] == [1] and rec["lost_models"] == []
+    assert rec["restore_s"] == 0.0
+    assert rec["drain_s"] > 0 and rec["total_s"] >= 0
+    # no renumbering: same 2-node cluster, node 1 retired out of service
+    assert eng.plan.cluster.n_nodes == 2
+    assert eng.health.retired_nodes == {1}
+    assert eng.health.doomed_nodes == set()
+    m = eng.plan.cluster.devs_per_node
+    for asg in eng.plan.assignments.values():
+        assert not (asg.mesh.devices(m) & {2, 3})
+    kinds = [e.kind for e in eng.topology_events]
+    assert kinds == ["notice", "retire"]
+    assert eng.stats()["preemption_migrations"] == 1
+    # every call ran exactly once — nothing was aborted or replayed
+    assert counts == {"gen": 3, "rew": 3, "atrain": 3, "ctrain": 3}
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_notice_deadline_expiry_falls_back_to_reactive():
+    """A deadline shorter than the drain: the engine degrades to the
+    reactive host-loss path (abort, compact, replan, live reshard) and the
+    result is still bit-identical."""
+    ref_actor, ref_critic = _reference_weights(3)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().notice(1, 0.0, at_call="rew", at_iteration=1)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    assert len(eng.recoveries) == 1
+    assert eng.recoveries[0]["mode"] == "live"  # reactive, not migrate
+    assert eng.stats()["preemption_migrations"] == 0
+    assert eng.plan.cluster.n_nodes == 1  # compacted: reactive renumbering
+    kinds = [e.kind for e in eng.topology_events]
+    assert kinds == ["notice", "loss"]
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_notice_mid_prefetch_drains_without_folding():
+    """A prefetch in flight toward the doomed host is drained — its
+    ReshardTask awaited, counted as aborted — and its transfer time is NOT
+    folded into the realloc calibration."""
+    from repro.core.estimator import CostModel
+    dfg, plan, executors, models, sharding_for, replanner, _ = _toy()
+    cost = CostModel(plan.cluster)
+    eng = RuntimeEngine(dfg, plan, executors, models, cost_model=cost,
+                        sharding_for=sharding_for, replanner=replanner)
+    node1 = DeviceMesh(1, 1, 0, 2)
+    doomed_target = Assignment(node1, ParallelStrategy(2, 1, 1, 1))
+    st = models["actor"]
+    st.prefetch = (doomed_target, _FakeTask(), {"sched": _FakeSched(),
+                                                "cross": False,
+                                                "waiter": None})
+    note = FLT.PreemptionNotice(1, 30.0, time.monotonic())
+    asyncio.run(eng._begin_migration(note))
+    assert st.prefetch is None
+    assert eng.prefetch_aborted == 1
+    assert cost._realloc_samples == []  # drained, never calibrated
+    assert eng.health.doomed_nodes == {1}
+    m = eng.plan.cluster.devs_per_node
+    for asg in eng.plan.assignments.values():
+        assert not (asg.mesh.devices(m) & {2, 3})
+
+
+# --------------------------------------------- speculative re-dispatch
+
+class _FlatCost:
+    """Deadline source for the toy (its calls have no ModelConfig)."""
+
+    def __init__(self, base):
+        self.base = base
+
+    def call_time(self, call, asg):
+        return self.base
+
+
+def test_speculative_redispatch_duplicate_wins():
+    ref_actor, ref_critic = _reference_weights(3)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().delay_call("rew", seconds=0.5, at_iteration=1)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        cost_model=_FlatCost(0.05), straggler_factor=2.0,
+                        fault_injector=inj, speculative_redispatch=True)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    s = eng.stats()
+    assert s["speculative_dispatches"] == 1
+    assert s["speculative_wins"] == 1
+    rec = next(r for r in eng.records
+               if r.name == "rew" and r.iteration == 1)
+    assert rec.speculated and rec.spec_won and rec.straggled
+    # TRAIN is never duplicated (exactly-once), and the primary's extra
+    # execution is the only duplicate anywhere
+    assert counts["atrain"] == 3 and counts["ctrain"] == 3
+    assert counts["gen"] == 3
+    assert counts["rew"] == 4  # 3 wins + the raced duplicate
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_speculative_loser_is_ignored():
+    """The duplicate loses the race (it is made slower than the stalled
+    primary): the primary's result is used, the loser runs out in the
+    background, and the outcome is bit-identical."""
+    ref_actor, ref_critic = _reference_weights(3)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().delay_call("rew", seconds=0.15,
+                                         at_iteration=1)
+    orig_rew = executors["rew"]
+
+    def rew_slow_duplicate(ms, inputs):
+        if ms is not models["reward"]:
+            # only the speculative duplicate sees a cloned ModelState
+            time.sleep(0.6)
+        return orig_rew(ms, inputs)
+
+    executors = dict(executors, rew=rew_slow_duplicate)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        cost_model=_FlatCost(0.05), straggler_factor=2.0,
+                        fault_injector=inj, speculative_redispatch=True)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    s = eng.stats()
+    assert s["speculative_dispatches"] == 1
+    assert s["speculative_wins"] == 0
+    rec = next(r for r in eng.records
+               if r.name == "rew" and r.iteration == 1)
+    assert rec.speculated and not rec.spec_won
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_speculation_off_keeps_posthoc_straggler_detection():
+    """Default (speculation off): a stalled call is still *detected* as a
+    straggler post-hoc, but never duplicated."""
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy()
+    inj = FLT.FaultInjector().delay_call("rew", seconds=0.2, at_iteration=1)
+    seen = []
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        cost_model=_FlatCost(0.05), straggler_factor=2.0,
+                        fault_injector=inj,
+                        on_straggler=lambda n, took, dl: seen.append(n))
+    eng.run(lambda t: {"prompts": t}, steps=3)
+    assert seen == ["rew"]
+    s = eng.stats()
+    assert s["stragglers"] == 1
+    assert s["speculative_dispatches"] == 0
+    assert counts["rew"] == 3  # never duplicated
+
+
+# ------------------------------------------------ opt-state-aware recovery
+
+def test_opt_state_live_recovery_bit_identity():
+    """Host loss with trainable opt states: the moments recover live next
+    to the params and the weights (a function of the moments) stay
+    bit-identical to the uninterrupted run."""
+    ref_actor, ref_critic = _reference_weights(3, opt=True)
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy(
+        opt=True)
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=1)
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    assert len(eng.recoveries) == 1
+    assert eng.recoveries[0]["mode"] == "live"
+    # opt placement was re-established on the survivor plan
+    assert models["actor"].opt_assignment is not None
+    assert "opt_state_resharded_bytes" in eng.stats()
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lost_opt_replica_forces_restore(tmp_path):
+    """Params replicated on the full mesh survive the loss, but the opt
+    state (living only on the killed node's TRAIN mesh) does not: the
+    model must be triaged as lost and checkpoint-restored — training on
+    live params with stale moments would silently corrupt."""
+    ref_actor, ref_critic = _reference_weights(3, opt=True,
+                                               actor_nodes="split")
+    dfg, plan, executors, models, sharding_for, replanner, counts = _toy(
+        opt=True, actor_nodes="split")
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=1)
+    ckpt = CheckpointManager(tmp_path / "ckpt", keep=5)
+
+    def on_retire(t, pool):
+        ckpt.save(t, {"actor": models["actor"].params,
+                      "actor_opt": models["actor"].opt_state})
+
+    restored = []
+
+    def restore(lost):
+        restored.append(tuple(lost))
+        _s, trees, _x = ckpt.restore({
+            "actor": models["actor"].params,
+            "actor_opt": models["actor"].opt_state})
+        models["actor"].params = trees["actor"]
+        models["actor"].opt_state = trees["actor_opt"]
+
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for,
+                        opt_sharding_for=sharding_for,
+                        fault_injector=inj, replanner=replanner,
+                        restore_models=restore)
+    pools = eng.run(lambda t: {"prompts": t}, steps=3,
+                    on_retire=on_retire)
+    assert [p["r"] for p in pools] == [1, 3, 5]
+    rec = eng.recoveries[0]
+    assert rec["mode"] == "checkpoint"
+    assert rec["lost_models"] == ["actor"]  # lost via its OPT state only
+    assert restored == [("actor",)]
+    for got, want in zip(_leaves(models["actor"]), ref_actor):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(_leaves(models["critic"]), ref_critic):
+        np.testing.assert_array_equal(got, want)
 
 
 # ------------------------------------------- prefetch drain (calibration)
@@ -490,3 +785,40 @@ def test_injector_matches_call_and_iteration():
         inj.on_execute("rew@1", 1)  # unrolled names match by base name
     inj.on_execute("rew", 1)  # consumed: fires once
     assert inj.fired == [("transient", "rew", 1)]
+
+
+def test_device_health_notice_retire_and_compact():
+    h = FLT.DeviceHealth(Cluster(n_nodes=3, devs_per_node=2))
+    h.notice(1, 30.0)
+    assert h.doomed_nodes == {1}
+    assert h.doomed_devices() == frozenset({2, 3})
+    assert not h.healthy  # a doomed host is a pending topology change
+    with pytest.raises(ValueError):
+        h.retire_host(0)  # never doomed: cannot retire
+    h.retire_host(1)
+    assert h.retired_nodes == {1} and h.doomed_nodes == set()
+    assert [e.kind for e in h.events] == ["notice", "retire"]
+    assert h.events[1].nodes == (1,)
+    cluster, node_map = h.compact()
+    assert cluster.n_nodes == 2
+    assert node_map == {0: 0, 2: 1}
+    assert h.retired_nodes == set()  # folded away
+    # a notice on a host that is already dead is a caller error
+    h2 = FLT.DeviceHealth(Cluster(n_nodes=2, devs_per_node=2))
+    h2.mark_host_dead(1)
+    with pytest.raises(ValueError):
+        h2.notice(1, 5.0)
+    with pytest.raises(ValueError):
+        h2.notice(7, 5.0)  # out of bounds
+
+
+def test_injector_notice_queues_never_raises():
+    inj = FLT.FaultInjector().notice(1, 5.0, at_call="rew", at_iteration=2)
+    inj.on_execute("rew", 1)  # wrong iteration: nothing queued
+    assert inj.take_notices() == []
+    inj.on_execute("rew@2", 2)  # matches — queues, does NOT raise
+    notes = inj.take_notices()
+    assert len(notes) == 1
+    assert notes[0].node == 1 and notes[0].deadline_s == 5.0
+    assert inj.take_notices() == []  # drained
+    assert inj.fired == [("notice", "rew", 2)]
