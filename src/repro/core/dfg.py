@@ -30,6 +30,10 @@ class Workload:
     prompt_len: int = 0
     gen_len: int = 0
     n_minibatches: int = 1  # PPO minibatches: sequential update sub-steps
+    # real token count for packed (cu_seqlens) training: when > 0, cost
+    # lookups key on (1, total_tokens) instead of (batch, seq_len) — the
+    # packed step's cost scales with real tokens, not the padded rectangle
+    total_tokens: int = 0
 
     @property
     def seq_len(self) -> int:
@@ -105,13 +109,19 @@ class DataflowGraph:
 def build_ppo(actor: ModelConfig, critic: ModelConfig, *, batch: int,
               prompt_len: int, gen_len: int, n_minibatches: int = 8,
               reward: Optional[ModelConfig] = None,
-              ref: Optional[ModelConfig] = None) -> DataflowGraph:
-    """The paper's six-call PPO workflow (Fig. 4)."""
+              ref: Optional[ModelConfig] = None,
+              packed: bool = False) -> DataflowGraph:
+    """The paper's six-call PPO workflow (Fig. 4).  ``packed`` marks the
+    train calls as running on the packed (total_tokens,) layout, so cost
+    estimation keys them on real token counts (worst case at build time:
+    batch * seq_len; runtime measurements refine per-total entries)."""
     reward = reward or critic
     ref = ref or actor
     gen = Workload(batch, prompt_len, gen_len)
     inf = Workload(batch, prompt_len, gen_len)
-    trn = Workload(batch, prompt_len, gen_len, n_minibatches)
+    trn = Workload(batch, prompt_len, gen_len, n_minibatches,
+                   total_tokens=(batch * (prompt_len + gen_len)
+                                 if packed else 0))
     calls = [
         FunctionCall("actor_gen", "actor", GENERATE, actor, gen,
                      ("prompts",), ("seq", "logp", "gen_mask"),

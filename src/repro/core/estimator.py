@@ -181,17 +181,28 @@ class CostModel:
         """
         if self.table is not None:
             w, key = call.workload, self._exact_key(call, asg)
-            hit = self.table.lookup_exact(call.call_type, w.batch, w.seq_len,
-                                          key)
+            kb, ks = self._table_dims(w)
+            hit = self.table.lookup_exact(call.call_type, kb, ks, key)
             if hit is not None:
                 return hit
             if hasattr(self.table, "lookup"):
-                mid = self.table.lookup(call.call_type, w.batch, w.seq_len,
+                mid = self.table.lookup(call.call_type, kb, ks,
                                         asg_key=key, min_points=2)
                 if mid is not None:
                     return mid
         return (self.call_cost(call, asg).total
                 * self.type_scales.get(call.call_type, 1.0))
+
+    @staticmethod
+    def _table_dims(w: Workload) -> tuple[int, int]:
+        """(batch, seq) dimensions used for table lookups/records.  Packed
+        workloads (``total_tokens > 0``) key on (1, total_tokens): the
+        packed step's cost is a function of the real token count, so two
+        cohorts with equal totals but different max lengths share one
+        entry — the honesty contract tested in test_profiler_roofline."""
+        if w.total_tokens > 0:
+            return 1, w.total_tokens
+        return w.batch, w.seq_len
 
     def _exact_key(self, call: FunctionCall, asg: Assignment) -> str:
         """Exact-hit key for a call: the assignment shape, qualified by the
@@ -232,7 +243,8 @@ class CostModel:
             # foreign-model calls get a qualified exact-hit key and stay out
             # of the table's interpolation grid (one model family per grid)
             owner = getattr(self.table, "model_name", None)
-            self.table.add(call.call_type, w.batch, w.seq_len, seconds,
+            kb, ks = self._table_dims(w)
+            self.table.add(call.call_type, kb, ks, seconds,
                            asg_key=self._exact_key(call, asg),
                            grid=owner is None or call.config.name == owner)
 
@@ -304,6 +316,13 @@ class CostModel:
 
     def _train_cost(self, cfg: ModelConfig, w: Workload, asg: Assignment):
         s, mesh, p = asg.strategy, asg.mesh, self.prof
+        if w.total_tokens > 0:
+            # packed step: flops/activation terms scale with the real token
+            # count — analytically that is the padded formula at the
+            # effective per-row length total/batch
+            eff = max(1, round(w.total_tokens / max(w.batch, 1)))
+            w = dataclasses.replace(w, prompt_len=eff, gen_len=0,
+                                    total_tokens=0)
         n_dev = mesh.size
         flops = 3.0 * fwd_flops(cfg, w.batch, w.seq_len)
         compute = flops / (n_dev * self._chip().peak_flops_bf16 * p.eff_train)

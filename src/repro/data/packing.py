@@ -1,0 +1,172 @@
+"""Packed variable-length batch layout (cu_seqlens), ReaLHF-style.
+
+Training on ragged RLHF batches padded to the max length wastes FLOPs on
+pad tokens.  The packed layout concatenates the B sequences into one
+``(total_tokens,)`` axis with cumulative sequence offsets ``cu_seqlens``
+((B+1,) int32, ``cu_seqlens[i]:cu_seqlens[i+1]`` is sequence i), so every
+downstream consumer — varlen attention, dropless-MoE routing, PPO losses —
+does work proportional to the *real* token count.
+
+Layout contract
+---------------
+* sequences are contiguous and in batch order; ``positions`` restart at 0
+  per sequence (RoPE uses them, exactly as the padded forward's arange).
+* the token axis may be longer than ``cu_seqlens[-1]``: trailing *phantom*
+  tokens (from ``pad_to`` bucketing) belong to no sequence.  Varlen
+  attention gives them a segment id of their own, every loss mask is 0
+  there, and their outputs are unspecified-but-finite.
+* packing happens on host (lengths are concrete ints); the packed arrays
+  then flow through jit with static shapes.  ``pad_to`` buckets the total
+  so minibatch shapes repeat across iterations (bounded recompiles).
+
+``pack``/``unpack`` are exact inverses over the valid region — the
+hypothesis round-trip test in tests/test_packed.py fuzzes this contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedBatch:
+    """One packed cohort: tokens (T,) int32, cu_seqlens (B+1,) int32,
+    positions (T,) int32 (within-sequence), and the static ``max_len`` of
+    any sequence (drives the banded varlen-attention reference)."""
+
+    tokens: jnp.ndarray
+    cu_seqlens: jnp.ndarray
+    positions: jnp.ndarray
+    max_len: int  # static (pytree aux): longest sequence in the batch
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def n_seqs(self) -> int:
+        return int(self.cu_seqlens.shape[0]) - 1
+
+    def tree_flatten(self):
+        return (self.tokens, self.cu_seqlens, self.positions), self.max_len
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, max_len=aux)
+
+
+def cu_seqlens_of(lens) -> np.ndarray:
+    """(B,) per-sequence lengths -> (B+1,) int32 cumulative offsets."""
+    lens = np.asarray(lens, np.int64)
+    assert (lens >= 1).all(), f"zero-length sequence in {lens}"
+    return np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+
+
+def _flat_indices(lens, row_len: int) -> np.ndarray:
+    lens = np.asarray(lens, np.int64)
+    assert (lens <= row_len).all(), (lens.max(), row_len)
+    return np.concatenate(
+        [i * row_len + np.arange(n) for i, n in enumerate(lens)]).astype(
+            np.int32)
+
+
+def pack(x, lens):
+    """Gather the first lens[i] entries of each row: (B, S, ...) -> (T, ...)
+    with T = sum(lens).  Differentiable (a gather), jit-safe given host
+    ``lens``."""
+    b, s = x.shape[:2]
+    idx = _flat_indices(lens, s)
+    return jnp.take(jnp.reshape(x, (b * s,) + x.shape[2:]),
+                    jnp.asarray(idx), axis=0)
+
+
+def unpack(xp, lens, row_len: int, pad_value=0):
+    """Inverse of :func:`pack`: (T, ...) -> (B, S, ...) padded with
+    ``pad_value``.  Phantom tokens beyond sum(lens) are dropped."""
+    lens = np.asarray(lens, np.int64)
+    b = len(lens)
+    total = int(lens.sum())
+    idx = _flat_indices(lens, row_len)
+    flat = jnp.full((b * row_len,) + xp.shape[1:], pad_value, xp.dtype)
+    flat = flat.at[jnp.asarray(idx)].set(xp[:total])
+    return flat.reshape((b, row_len) + xp.shape[1:])
+
+
+def positions_of(lens) -> np.ndarray:
+    """(T,) within-sequence positions (0..len_i-1 per sequence)."""
+    lens = np.asarray(lens, np.int64)
+    return np.concatenate([np.arange(n) for n in lens]).astype(np.int32)
+
+
+def segment_ids_of(cu_seqlens, total: int) -> jnp.ndarray:
+    """(T,) int32 sequence id per token; phantom tokens beyond
+    cu_seqlens[-1] get id B (one past the last sequence)."""
+    cu = jnp.asarray(cu_seqlens)
+    return jnp.searchsorted(cu[1:], jnp.arange(total), side="right").astype(
+        jnp.int32)
+
+
+def pack_batch(tokens, lens) -> PackedBatch:
+    """(B, S) padded tokens + host lens -> PackedBatch."""
+    lens = np.asarray(lens, np.int64)
+    return PackedBatch(
+        tokens=pack(tokens, lens).astype(jnp.int32),
+        cu_seqlens=jnp.asarray(cu_seqlens_of(lens)),
+        positions=jnp.asarray(positions_of(lens)),
+        max_len=int(lens.max()))
+
+
+def pad_to(packed: PackedBatch, total: int, pad_id: int = 0) -> PackedBatch:
+    """Right-pad the token axis to ``total`` with phantom tokens (mask-0,
+    own attention segment).  cu_seqlens is unchanged — phantoms belong to
+    no sequence."""
+    t = packed.tokens.shape[0]
+    assert total >= t, (total, t)
+    if total == t:
+        return packed
+    return PackedBatch(
+        tokens=jnp.pad(packed.tokens, (0, total - t),
+                       constant_values=pad_id),
+        cu_seqlens=packed.cu_seqlens,
+        positions=jnp.pad(packed.positions, (0, total - t)),
+        max_len=packed.max_len)
+
+
+def bucket_total(t: int, bucket: int = 64) -> int:
+    """Round a token count up to the bucket multiple (recompile bound)."""
+    return -(-t // bucket) * bucket
+
+
+def pack_minibatches(tokens, per_token, lens, n_minibatches: int,
+                     bucket: int = 64):
+    """Split B sequences into ``n_minibatches`` contiguous groups (the same
+    grouping as the padded path's ``reshape(nmb, B//nmb)``), pack each
+    group, and stack to common (bucketed) token totals for ``lax.scan``.
+
+    tokens: (B, S); per_token: dict of token-aligned (B, S) float arrays
+    (loss masks must be 0 outside each sequence's valid region); lens: (B,)
+    host ints.  Returns a dict of (nmb, ...) stacked arrays: "tokens",
+    "cu_seqlens", "positions" plus one entry per ``per_token`` key.
+    """
+    lens = np.asarray(lens, np.int64)
+    b = tokens.shape[0]
+    assert b % n_minibatches == 0, (b, n_minibatches)
+    gb = b // n_minibatches
+    groups = [slice(j * gb, (j + 1) * gb) for j in range(n_minibatches)]
+    tmb = bucket_total(int(max(lens[g].sum() for g in groups)), bucket)
+    out = {k: [] for k in ("tokens", "cu_seqlens", "positions",
+                           *per_token)}
+    for g in groups:
+        pb = pad_to(pack_batch(tokens[g], lens[g]), tmb)
+        out["tokens"].append(pb.tokens)
+        out["cu_seqlens"].append(pb.cu_seqlens)
+        out["positions"].append(pb.positions)
+        for k, v in per_token.items():
+            col = pack(v[g], lens[g])
+            out[k].append(jnp.pad(col, (0, tmb - col.shape[0])))
+    return {k: jnp.stack(v) for k, v in out.items()}

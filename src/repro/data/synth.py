@@ -38,6 +38,20 @@ class PromptDataset:
         return {"tokens": jnp.asarray(toks),
                 "prompt_mask": jnp.asarray(mask.astype(np.float32))}
 
+    def packed_batch_at(self, step: int) -> "packing.PackedBatch":
+        """The same deterministic batch as :meth:`batch_at`, emitted in the
+        packed (total_tokens,) cu_seqlens layout (left-aligned valid
+        tokens, no pad tokens anywhere) — the train-side input for
+        ``ExperimentConfig.packed_training``."""
+        from repro.data import packing
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.integers(1, self.vocab, (self.batch, self.plen),
+                            dtype=np.int32)
+        lens = rng.integers(self.min_len, self.plen + 1, (self.batch,))
+        # batch_at right-pads each row; packing gathers the valid prefix,
+        # so pack_batch on the raw tokens + lens is the identical cohort
+        return packing.pack_batch(jnp.asarray(toks), lens)
+
     def __iter__(self) -> Iterator[dict]:
         step = 0
         while True:

@@ -42,6 +42,28 @@ def mha(q, k, v, *, causal=True, window=None, q_positions=None,
         kv_positions=kv_positions, interpret=(impl == "pallas_interpret"))
 
 
+def varlen_mha(q, k, v, cu_seqlens, *, causal=True, window=None,
+               max_seqlen=None, impl="reference"):
+    """Packed (cu_seqlens) varlen attention over one token axis.
+
+    q: (T, Hq, D); k/v: (T, Hkv, D); cu_seqlens: (B+1,) int32.  Token i
+    attends token j iff both lie in the same ``cu_seqlens`` segment (and
+    j <= i when causal); phantom tokens at or beyond ``cu_seqlens[-1]``
+    form their own segment (finite outputs, discarded by loss masks).
+    ``max_seqlen`` (static) lets the reference restrict each query chunk
+    to its key band — without it the oracle scans all T keys."""
+    _check(impl)
+    if impl == "stub":
+        return q + 0.0 * (k.sum() + v.sum())
+    if impl == "reference":
+        return ref.mha_varlen_ref(q, k, v, cu_seqlens, causal=causal,
+                                  window=window, max_seqlen=max_seqlen)
+    from repro.kernels import varlen_attention
+    return varlen_attention.flash_mha_varlen(
+        q, k, v, cu_seqlens, causal=causal, window=window,
+        interpret=(impl == "pallas_interpret"))
+
+
 def decode_mha(q, k_cache, v_cache, *, cache_len, window=None, impl="reference"):
     _check(impl)
     if impl == "reference":

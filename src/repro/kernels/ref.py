@@ -80,6 +80,72 @@ def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
     return out.reshape(b, sq, hq, d)
 
 
+def _varlen_block(q, k, v, seg_q, seg_k, pos_q, pos_k, *, causal, window,
+                  g: int):
+    """One (Tq, Tk) tile of packed varlen attention.  q: (Tq, Hq, D);
+    k/v: (Tk, Hkv, D); seg_*/pos_*: int32 segment ids / global positions.
+    Tokens attend only within their own segment (block-diagonal mask)."""
+    tq, hq, d = q.shape
+    hkv = k.shape[1]
+    qr = q.reshape(tq, hkv, g, d)
+    logits = jnp.einsum("qhgd,khd->hgqk", qr, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    mask = seg_q[:, None] == seg_k[None, :]
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        mask &= (pos_q[:, None] - pos_k[None, :]) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hgqk,khd->qhgd", probs.astype(v.dtype), v)
+    return out.reshape(tq, hq, d)
+
+
+def mha_varlen_ref(q, k, v, cu_seqlens, *, causal: bool = True,
+                   window: int | None = None, max_seqlen: int | None = None,
+                   q_chunk: int = 128):
+    """Packed variable-length attention: the oracle for
+    ``varlen_attention.flash_mha_varlen``.
+
+    q: (T, Hq, D); k/v: (T, Hkv, D) — the B sequences concatenated on the
+    token axis with offsets ``cu_seqlens`` ((B+1,) int32).  The mask is
+    block-diagonal (a token only attends keys of its own sequence, causal
+    within when ``causal``); phantom tokens beyond ``cu_seqlens[-1]`` form
+    one extra segment of their own (outputs unspecified-but-finite).
+
+    ``max_seqlen`` (static) bounds the longest sequence: with it and
+    ``causal`` the computation runs banded — query chunks against the
+    trailing ``max_seqlen``-wide key band — so cost is O(T·max_seqlen)
+    instead of O(T²), the packed analogue of ``mha_ref``'s q-chunking.
+    Changing the tokens of sequence j leaves sequence i's output
+    bit-identical: cross-segment scores are hard-masked to NEG_INF before
+    the softmax, contributing exactly 0.0 to the combine.
+    """
+    t, hq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    cu = jnp.asarray(cu_seqlens)
+    pos = jnp.arange(t)
+    seg = jnp.searchsorted(cu[1:], pos, side="right").astype(jnp.int32)
+
+    band = max_seqlen if (causal and max_seqlen is not None) else None
+    if band is None or t <= q_chunk:
+        return _varlen_block(q, k, v, seg, seg, pos, pos, causal=causal,
+                             window=window, g=g)
+    outs = []
+    for i in range(-(-t // q_chunk)):
+        lo, hi = i * q_chunk, min((i + 1) * q_chunk, t)
+        # same-segment causal keys of queries [lo, hi) all lie in
+        # [lo - band + 1, hi): a key more than band-1 behind its query is
+        # in an earlier sequence (sequences are contiguous, len <= band)
+        klo = max(0, lo - band + 1)
+        outs.append(_varlen_block(
+            q[lo:hi], k[klo:hi], v[klo:hi], seg[lo:hi], seg[klo:hi],
+            pos[lo:hi], pos[klo:hi], causal=causal, window=window, g=g))
+    return jnp.concatenate(outs, axis=0)
+
+
 def decode_mha_ref(q, k_cache, v_cache, *, cache_len, window: int | None = None):
     """Single-token decode attention over a (ring or linear) KV cache.
 

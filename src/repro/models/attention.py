@@ -49,11 +49,24 @@ def _project_qkv(p, cfg: ModelConfig, xq, xkv, positions_q, positions_kv,
 
 
 def attn_apply(p, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
-               causal=True, impl="reference"):
-    """Full-sequence attention (training / prefill without cache)."""
+               causal=True, impl="reference", cu_seqlens=None,
+               max_seqlen=None):
+    """Full-sequence attention (training / prefill without cache).
+
+    Packed mode (``cu_seqlens`` given): x is the (1, T, D) packed cohort,
+    ``positions`` the within-sequence positions (RoPE restarts per
+    sequence), and attention is block-diagonal over the ``cu_seqlens``
+    segments via :func:`ops.varlen_mha` — padded-path parity to fp
+    tolerance on identical logical inputs."""
     q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
-    out = ops.mha(q, k, v, causal=causal, window=spec.window,
-                  q_positions=positions, kv_positions=positions, impl=impl)
+    if cu_seqlens is not None:
+        assert x.shape[0] == 1, f"packed cohort must be (1, T, D): {x.shape}"
+        out = ops.varlen_mha(q[0], k[0], v[0], cu_seqlens, causal=causal,
+                             window=spec.window, max_seqlen=max_seqlen,
+                             impl=impl)[None]
+    else:
+        out = ops.mha(q, k, v, causal=causal, window=spec.window,
+                      q_positions=positions, kv_positions=positions, impl=impl)
     return L.dense_apply(p["wo"], out.reshape(*x.shape[:2], cfg.q_dim))
 
 

@@ -68,8 +68,28 @@ def _embed_inputs(params, cfg: ModelConfig, batch):
     return x
 
 
-def forward(params, cfg: ModelConfig, batch, *, impl="reference", remat=True):
-    """Full-sequence forward.  Returns (hidden (B,S,D), aux_loss)."""
+def forward(params, cfg: ModelConfig, batch, *, impl="reference", remat=True,
+            max_seqlen=None):
+    """Full-sequence forward.  Returns (hidden (B,S,D), aux_loss).
+
+    Packed mode: when ``batch`` has "cu_seqlens", its "tokens" are a (T,)
+    packed cohort and "positions" the (T,) within-sequence positions.  The
+    cohort flows through the stack as one (1, T, D) row — norms/FFN/MoE
+    are per-token, attention goes block-diagonal via varlen_mha — and the
+    returned hidden is (1, T, D).  ``max_seqlen`` (static: the longest
+    sequence) keys the banded varlen reference; pass it whenever known."""
+    if "cu_seqlens" in batch:
+        assert cfg.family != "encdec" and not cfg.prefix_len, \
+            "packed training supports decoder-only, prefix-free configs"
+        x = L.embed_apply(params["embed"],
+                          batch["tokens"][None]).astype(cfg.dtype)
+        x = ctx.constrain(x, ctx.BATCH, None, None)
+        h, aux = T.stack_apply(params["groups"], cfg, x,
+                               batch["positions"][None], causal=True,
+                               impl=impl, remat=remat,
+                               cu_seqlens=batch["cu_seqlens"],
+                               max_seqlen=max_seqlen)
+        return L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps), aux
     x = _embed_inputs(params, cfg, batch)
     pos = jnp.arange(x.shape[1])[None, :]
     enc_out = None

@@ -68,8 +68,17 @@ def _ffn(p, cfg, x, *, impl="reference", want_aux=True):
 
 
 def block_apply(p, cfg, spec, x, positions, *, causal=True, impl="reference",
-                enc_out=None, want_state=False):
-    """Full-sequence block.  Returns (x, aux_loss, state_or_None)."""
+                enc_out=None, want_state=False, cu_seqlens=None,
+                max_seqlen=None):
+    """Full-sequence block.  Returns (x, aux_loss, state_or_None).
+
+    Packed mode (``cu_seqlens`` given): attention goes block-diagonal over
+    the packed segments; norms/FFN/MoE are per-token and need no change.
+    Recurrent mixers (LRU/SSD) scan the raw token axis and would leak
+    state across sequence boundaries, so they reject packed cohorts."""
+    if cu_seqlens is not None and spec.kind != ATTN:
+        raise NotImplementedError(
+            f"packed training is attention-only; got mixer kind {spec.kind}")
     h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     state = None
     if spec.kind == ATTN:
@@ -79,7 +88,8 @@ def block_apply(p, cfg, spec, x, positions, *, causal=True, impl="reference",
             state = kv
         else:
             y = A.attn_apply(p["mixer"], cfg, spec, h, positions,
-                             causal=causal, impl=impl)
+                             causal=causal, impl=impl,
+                             cu_seqlens=cu_seqlens, max_seqlen=max_seqlen)
     elif spec.kind == LRU:
         out = R.lru_apply(p["mixer"], cfg, h, impl=impl, return_state=want_state)
         y, state = out if want_state else (out, None)
@@ -158,7 +168,8 @@ def stack_init(key, cfg: ModelConfig, cross: bool = False):
 
 
 def stack_apply(groups_params, cfg: ModelConfig, x, positions, *, causal=True,
-                impl="reference", enc_out=None, remat=True):
+                impl="reference", enc_out=None, remat=True, cu_seqlens=None,
+                max_seqlen=None):
     aux_total = jnp.zeros((), jnp.float32)
     for (specs, n), gp in zip(groups_of(cfg), groups_params):
         def body(carry, layer_p, specs=specs):
@@ -167,7 +178,9 @@ def stack_apply(groups_params, cfg: ModelConfig, x, positions, *, causal=True,
             for i, spec in enumerate(specs):
                 xc, a, _ = block_apply(layer_p[f"b{i}"], cfg, spec, xc,
                                        positions, causal=causal, impl=impl,
-                                       enc_out=enc_out)
+                                       enc_out=enc_out,
+                                       cu_seqlens=cu_seqlens,
+                                       max_seqlen=max_seqlen)
                 aux = aux + a
             return (xc, aux), None
         if remat:

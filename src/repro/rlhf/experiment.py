@@ -16,8 +16,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.data import packing
 from repro.core import dfg as DFG
 from repro.core import fault as FLT
 from repro.core.estimator import CostModel, Profile
@@ -100,6 +102,12 @@ class ExperimentConfig:
     # experiment restricts duplication to INFERENCE — actor_gen folds a
     # stateful RNG split, so a GENERATE re-run is not idempotent here.
     speculative_redispatch: bool = False
+    # packed variable-length training (data/packing.py): train steps run on
+    # the (total_tokens,) cu_seqlens layout — varlen attention, dropless
+    # MoE over real tokens, packed PPO losses — instead of (B, S) padding.
+    # Rollout/inference paths are unchanged; train cost scales with real
+    # token counts (and the estimator keys on them, Workload.total_tokens).
+    packed_training: bool = False
 
 
 class RLHFExperiment:
@@ -114,7 +122,8 @@ class RLHFExperiment:
         self.cluster = cluster
         self.graph = DFG.build_ppo(
             actor_cfg, critic_cfg, batch=exp.batch, prompt_len=exp.prompt_len,
-            gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches)
+            gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches,
+            packed=exp.packed_training)
         self.cost = CostModel(cluster)
         self.profile_store = None
         if exp.profile_path:
@@ -205,10 +214,25 @@ class RLHFExperiment:
             p, c_cfg, toks, m, impl=impl))
         val_fn = jax.jit(lambda p, toks: PPO.sequence_values(
             p, c_cfg, toks, gen_start, impl=impl, remat=False))
-        actor_step = jax.jit(PPO.make_actor_train_step(
-            a_cfg, hp, exp.opt, gen_start, impl=impl), donate_argnums=(0, 1))
-        critic_step = jax.jit(PPO.make_critic_train_step(
-            c_cfg, hp, exp.opt, gen_start, impl=impl), donate_argnums=(0, 1))
+        if exp.packed_training:
+            # one static max_seqlen (the padded S) keys the banded varlen
+            # reference; per-iteration token totals vary but are bucketed
+            # by pack_minibatches, so recompiles stay bounded
+            actor_step = jax.jit(PPO.make_packed_actor_train_step(
+                a_cfg, hp, exp.opt, impl=impl,
+                max_seqlen=exp.prompt_len + exp.gen_len),
+                donate_argnums=(0, 1))
+            critic_step = jax.jit(PPO.make_packed_critic_train_step(
+                c_cfg, hp, exp.opt, impl=impl,
+                max_seqlen=exp.prompt_len + exp.gen_len),
+                donate_argnums=(0, 1))
+        else:
+            actor_step = jax.jit(PPO.make_actor_train_step(
+                a_cfg, hp, exp.opt, gen_start, impl=impl),
+                donate_argnums=(0, 1))
+            critic_step = jax.jit(PPO.make_critic_train_step(
+                c_cfg, hp, exp.opt, gen_start, impl=impl),
+                donate_argnums=(0, 1))
 
         state = {"rng": rng}
 
@@ -251,6 +275,61 @@ class RLHFExperiment:
             ms.params, ms.opt_state, stats = critic_step(ms.params,
                                                          ms.opt_state, batch)
             return {"critic_stats": jax.tree.map(float, stats)}
+
+        # ---------------------------------------------- packed train path
+        P, G = exp.prompt_len, exp.gen_len
+
+        def _packed_prep(inputs):
+            """Host-side repack of the padded rollout pool: per-sequence
+            lens (keeping one post-EOS bootstrap token — GAE parity needs
+            the carry entering the last valid token to be -V of its
+            position) plus token-aligned (B, S) per-token arrays and the
+            packed advantages/returns from the (T,) PPO math."""
+            gm = np.asarray(jax.device_get(inputs["gen_mask"]))
+            g_valid = gm.sum(-1).astype(np.int64)
+            lens = P + np.minimum(g_valid + 1, G)
+            b, s = inputs["seq"].shape
+            z = jnp.zeros((b, s), jnp.float32)
+            logp_full = z.at[:, P:].set(inputs["logp"])
+            ref_full = z.at[:, P:].set(inputs["ref_logp"])
+            mask_full = z.at[:, P:].set(inputs["gen_mask"])
+            v_full = z.at[:, P - 1:].set(inputs["values"])
+            cu = jnp.asarray(packing.cu_seqlens_of(lens))
+            m_p = packing.pack(mask_full, lens)
+            v_p = packing.pack(v_full, lens)
+            shaped = PPO.shaped_rewards_packed(
+                hp, inputs["rewards"], packing.pack(logp_full, lens),
+                packing.pack(ref_full, lens), m_p, cu)
+            adv, ret = PPO.gae_packed(hp, shaped, PPO.packed_shift_right(v_p),
+                                      v_p, m_p, cu)
+            return lens, s, logp_full, mask_full, adv, ret
+
+        def actor_train_packed(ms, inputs):
+            lens, s, logp_full, mask_full, adv, _ = _packed_prep(inputs)
+            batch = packing.pack_minibatches(
+                inputs["seq"],
+                {"logp": logp_full, "adv": packing.unpack(adv, lens, s),
+                 "mask": mask_full},
+                lens, hp.n_minibatches)
+            ms.params, ms.opt_state, stats = actor_step(ms.params,
+                                                        ms.opt_state, batch)
+            return {"actor_stats": jax.tree.map(float, stats)}
+
+        def critic_train_packed(ms, inputs):
+            lens, s, _, mask_full, _, ret = _packed_prep(inputs)
+            old_full = jnp.zeros_like(mask_full).at[:, P:].set(
+                inputs["values"][:, :-1])
+            batch = packing.pack_minibatches(
+                inputs["seq"],
+                {"values": old_full, "ret": packing.unpack(ret, lens, s),
+                 "mask": mask_full},
+                lens, hp.n_minibatches)
+            ms.params, ms.opt_state, stats = critic_step(ms.params,
+                                                         ms.opt_state, batch)
+            return {"critic_stats": jax.tree.map(float, stats)}
+
+        if exp.packed_training:
+            actor_train, critic_train = actor_train_packed, critic_train_packed
 
         self.executors = {
             "actor_gen": actor_gen, "reward_inf": reward_inf,

@@ -44,13 +44,14 @@ except ImportError:
 
     _st = types.ModuleType("hypothesis.strategies")
     for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
-                  "tuples", "just", "composite", "one_of", "text"):
+                  "tuples", "just", "composite", "one_of", "text", "data"):
         setattr(_st, _name, _strategy)
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _given
     _hyp.settings = _settings
     _hyp.strategies = _st
+    _hyp.assume = lambda *_a, **_k: True
     _hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st

@@ -226,6 +226,43 @@ def test_lookup_mid_tier_interpolates_held_out_point():
     assert t.lookup(TRAIN, 2, 24, min_points=3) is None  # grid has 2 points
 
 
+def test_packed_workloads_key_on_real_token_counts():
+    """Packed (cu_seqlens) training regression: two train workloads with
+    the same total_tokens but different padded rectangles (8x96 vs 24x32)
+    must share one table entry and return the same calibrated estimate —
+    the packed step's cost scales with real tokens, not max-len."""
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    cluster = Cluster(1, 1, chip=CPU)
+    cost = CostModel(cluster, table=ProfileTable(cfg.name, {}))
+    wide = FunctionCall("w", "m", TRAIN, cfg,
+                        Workload(8, 96, 0, total_tokens=768))
+    tall = FunctionCall("t", "m", TRAIN, cfg,
+                        Workload(24, 32, 0, total_tokens=768))
+    assert CostModel._table_dims(wide.workload) == (1, 768)
+    assert CostModel._table_dims(tall.workload) == \
+        CostModel._table_dims(wide.workload)
+    # a measurement recorded under one padded shape is an exact hit for
+    # the other: same real tokens, same packed step
+    cost.record_measurement(wide, ASG1, 0.042)
+    assert cost.call_time(tall, ASG1) == pytest.approx(0.042)
+    assert cost.table.lookup_exact(TRAIN, 1, 768,
+                                   assignment_key(ASG1)) == \
+        pytest.approx(0.042)
+    # the analytic fallback also scales with real tokens: equal totals land
+    # close (attention's quadratic term still sees per-sequence shape, so
+    # exact equality is the *calibrated* table's contract, not analytics')
+    analytic = CostModel(cluster)
+    assert analytic.call_time(wide, ASG1) == pytest.approx(
+        analytic.call_time(tall, ASG1), rel=0.25)
+    sparse = FunctionCall("s", "m", TRAIN, cfg,
+                          Workload(8, 96, 0, total_tokens=192))
+    assert analytic.call_time(sparse, ASG1) < analytic.call_time(wide, ASG1)
+    # padded workloads (total_tokens == 0) keep the (batch, seq) key
+    padded = FunctionCall("p", "m", TRAIN, cfg, Workload(8, 96, 0))
+    assert CostModel._table_dims(padded.workload) == (8, 96)
+    assert analytic.call_time(padded, ASG1) > analytic.call_time(sparse, ASG1)
+
+
 def test_record_measurement_and_refit():
     cfg = ARCHS["qwen2-0.5b"].reduced()
     cluster = Cluster(1, 1, chip=CPU)
