@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Offline execution-plan verification (repro.analysis.verify).
+
+    python scripts/verify_plan.py --configs-smoke
+        Sweep the whole config zoo: each named arch's reduced config gets a
+        symmetric PPO plan on a toy cluster and must verify with zero
+        error-level diagnostics; then a full-size search smoke (llama-7b on
+        a 2x8 v5e pod) must statically prune >0 candidates and still emit a
+        clean winning plan.  CI gate — exit 1 on any error.
+
+    python scripts/verify_plan.py --arch llama-7b --nodes 2 --devs 8 [--h100]
+        Search a plan for one arch/cluster and print every diagnostic for
+        the winner (warnings included).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro import hw                                    # noqa: E402
+from repro.analysis.verify import errors, verify        # noqa: E402
+from repro.configs import ARCHS                         # noqa: E402
+from repro.core import dfg as DFG                       # noqa: E402
+from repro.core import search as SRCH                   # noqa: E402
+from repro.core.plan import (Cluster, ParallelStrategy,  # noqa: E402
+                             symmetric_plan)
+
+
+def _ppo_graph(cfg, *, batch=4, prompt_len=8, gen_len=8):
+    return DFG.build_ppo(cfg, cfg, batch=batch, prompt_len=prompt_len,
+                         gen_len=gen_len, n_minibatches=2)
+
+
+def _report(tag: str, diags) -> int:
+    errs = errors(diags)
+    warns = [d for d in diags if d.severity == "warn"]
+    status = "FAIL" if errs else "ok"
+    print(f"{status:4s} {tag}: {len(errs)} error(s), {len(warns)} warn(s)")
+    for d in errs:
+        print(f"       {d}")
+    return len(errs)
+
+
+def configs_smoke() -> int:
+    n_err = 0
+    cluster = Cluster(n_nodes=2, devs_per_node=4, chip=hw.HOST_CPU)
+    strategy = ParallelStrategy(dp=cluster.n_nodes * cluster.devs_per_node,
+                                tp=1, pp=1, mbs=2)
+    for name in sorted(ARCHS):
+        g = _ppo_graph(ARCHS[name].reduced())
+        plan = symmetric_plan([c.name for c in g.calls], cluster, strategy)
+        n_err += _report(f"zoo {name}", verify(g, plan))
+
+    # full-size search smoke: big enough that the verifier has real
+    # candidates to prune (whole-pod single-call layouts OOM a v5e chip),
+    # small enough to stay CI-cheap
+    cfg = ARCHS["llama-7b"]
+    cl = Cluster(n_nodes=4, devs_per_node=8)
+    g = _ppo_graph(cfg, batch=8, prompt_len=128, gen_len=128)
+    res = SRCH.search(g, cl, iters=120, seed=0)
+    print(f"search smoke: pruned {res.pruned} candidates, "
+          f"best est {res.best_time:.2f}s")
+    if res.pruned <= 0:
+        print("FAIL search smoke: expected >0 statically pruned candidates")
+        n_err += 1
+    n_err += _report("search winner llama-7b@4x8", verify(g, res.best_plan))
+    return n_err
+
+
+def single(args) -> int:
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    kw = {}
+    if args.h100:
+        kw = dict(chip=hw.H100, intra_node_bw=450e9, inter_node_bw=50e9)
+    elif args.reduced:
+        kw = dict(chip=hw.HOST_CPU)
+    cluster = Cluster(n_nodes=args.nodes, devs_per_node=args.devs, **kw)
+    g = _ppo_graph(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                   gen_len=args.gen_len)
+    res = SRCH.search(g, cluster, iters=args.search_iters, seed=0)
+    print(f"searched {res.evals} plans (pruned {res.pruned} candidates), "
+          f"best est {res.best_time:.2f}s")
+    print(res.best_plan)
+    diags = verify(g, res.best_plan)
+    for d in diags:
+        print(f"  {d}")
+    return len(errors(diags))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs-smoke", action="store_true")
+    ap.add_argument("--arch", default="llama-7b", choices=sorted(ARCHS))
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--devs", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen-len", type=int, default=128)
+    ap.add_argument("--search-iters", type=int, default=200)
+    ap.add_argument("--h100", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+    n_err = configs_smoke() if args.configs_smoke else single(args)
+    if n_err:
+        print(f"\n{n_err} error-level finding(s)", file=sys.stderr)
+        return 1
+    print("\nall plans verify clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Static analysis over execution plans and kernel contracts.
+
+Two runtime-free passes that catch invalid configurations before anything
+executes (the searcher mutates plans thousands of times and the elastic
+runtime re-derives them under duress — both want a cheap validity gate):
+
+  * ``analysis.verify`` — structural + capacity rules over
+    ``(DataflowGraph, ExecutionPlan, Cluster, hw)``: mesh legality, strategy
+    divisibility, the static on-policy guard (version edges), TRAIN
+    uniqueness, per-device peak-memory bounds including the reallocation
+    double-buffer highwater.  Wired into ``core.search`` (candidate
+    pruning), ``core.runtime`` (deploy/replan assertion) and
+    ``scripts/verify_plan.py`` (offline CLI).
+  * ``analysis.lint`` — an ``ast``-based lint of ``src/repro`` enforcing
+    the repo's cross-cutting kernel contracts (impl-tier dispatch, fp32
+    accumulation, no host branching on traced values, declared
+    ExperimentConfig fields).  Run as ``python -m repro.analysis.lint``.
+
+Rule catalog: docs/ANALYSIS.md.
+"""
+
+from repro.analysis.verify import (Diagnostic, PlanVerificationError,  # noqa: F401
+                                   assert_valid, errors, verify,
+                                   verify_graph)

@@ -271,6 +271,11 @@ class RuntimeEngine:
         self._model_locks: dict[str, asyncio.Lock] = {}
         self._model_users: dict[str, int] = {}
         self._model_idle: dict[str, asyncio.Condition] = {}
+        # static gate: an invalid plan must fail here, with structured
+        # diagnostics, not deep inside the first reshard
+        from repro.analysis.verify import assert_valid
+        assert_valid(dfg, plan, cost=self.cost,
+                     pipeline_depth=self.pipeline_depth, context="deploy")
         self._rebuild_mesh_devs()
 
     # ------------------------------------------------------------ plan lookup
@@ -1320,7 +1325,15 @@ class RuntimeEngine:
     # ------------------------------------------------------------ elasticity
     def replan(self, new_plan: ExecutionPlan):
         """Adopt a new execution plan (elastic resize / failed-node mask).
-        Parameters physically move on the next call via reallocation."""
+        Parameters physically move on the next call via reallocation.
+
+        Every elastic path (host-loss recovery, gain, preemption-notice
+        migration, recalibration swap) routes through here, so plans built
+        under duress are verified before adoption — a broken replanner
+        surfaces a ``PlanVerificationError`` instead of a reshard crash."""
+        from repro.analysis.verify import assert_valid
+        assert_valid(self.dfg, new_plan, cost=self.cost,
+                     pipeline_depth=self.pipeline_depth, context="replan")
         self.plan = new_plan
         self._rebuild_mesh_devs()
 

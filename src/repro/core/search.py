@@ -38,6 +38,9 @@ class SearchResult:
     # calibrated CostModel: estimated time, how much of it is backed by
     # exact measurements, and the estimated-vs-measured error on those calls
     accepted_log: list[dict] = dataclasses.field(default_factory=list)
+    # candidates dropped by the static verifier before costing (see
+    # repro.analysis.verify.filter_candidates)
+    pruned: int = 0
 
 
 def candidate_assignments(dfg: DataflowGraph, cluster: Cluster,
@@ -100,6 +103,7 @@ def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
                 extra_seeds: Optional[list] = None,
                 pipeline_iters: int = 1,
                 cands: Optional[dict] = None,
+                static_prune: bool = True,
                 on_improve: Optional[Callable] = None) -> SearchResult:
     """``extra_seeds``: known-good plans (e.g. the symmetric heuristic) that
     are part of the search space; they are evaluated up front so the returned
@@ -108,7 +112,13 @@ def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
     (cross-iteration overlap of frozen-model inference).  ``cands``
     overrides the per-call candidate lists — the caller's filter (e.g.
     ``replan_on_topology(avoid_nodes=...)``) then bounds every proposal,
-    not just the chain's start."""
+    not just the chain's start.  ``static_prune`` runs the static verifier
+    first: graph-level errors (cycle, duplicated TRAIN, broken version
+    edges) abort the search immediately, and per-call candidates with
+    error-level findings (a single call already over the memory cap, an
+    empty pipeline stage) are dropped before the chain ever costs them —
+    every drop is monotone (such a candidate is infeasible in *any* plan),
+    so the feasible optimum is preserved."""
     from repro.core.dfg import unroll_iterations
     rng = random.Random(seed)
     mem_cap = mem_cap or cluster.chip.hbm_bytes
@@ -116,6 +126,14 @@ def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
                 if pipeline_iters > 1 else None)
     if cands is None:
         cands = candidate_assignments(dfg, cluster, max_candidates, rng)
+    pruned = 0
+    if static_prune:
+        from repro.analysis.verify import (PlanVerificationError, errors,
+                                           filter_candidates, verify_graph)
+        graph_errs = errors(verify_graph(dfg))
+        if graph_errs:
+            raise PlanVerificationError(graph_errs, context="search")
+        cands, pruned = filter_candidates(dfg, cluster, cands, cost, mem_cap)
     space = 1.0
     for c in dfg.calls:
         space *= max(len(cands[c.name]), 1)
@@ -161,7 +179,8 @@ def mcmc_search(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
     if best is None:  # no feasible plan found; return the least-bad one
         best, best_time = cur.copy(), cur_time
     history.append((_time.monotonic() - t0, best_time))
-    return SearchResult(best, best_time, init_time, history, evals, space)
+    return SearchResult(best, best_time, init_time, history, evals, space,
+                        pruned=pruned)
 
 
 def brute_force(dfg: DataflowGraph, cluster: Cluster, cost: CostModel, *,
@@ -258,6 +277,9 @@ def search(dfg: DataflowGraph, cluster: Cluster,
             user_cb(it, plan, t)
 
     res = mcmc_search(dfg, cluster, cost, on_improve=on_improve, **mcmc_kw)
+    if res.pruned:
+        log(f"search: verifier pruned {res.pruned} candidate assignments "
+            "before costing")
     final = {"iter": None, "est_time_s": res.best_time}
     final.update(_calibration_check(dfg, res.best_plan, cost))
     accepted.append(final)

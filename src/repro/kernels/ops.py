@@ -188,6 +188,7 @@ def _truncate_logits(scaled, top_k: int, top_p: float):
     return scaled
 
 
+# lint: allow(impl-dispatch) -- all tiers share the jnp body (see docstring)
 def sample_logits(logits, key=None, *, temperature: float = 1.0,
                   sampler: str = "cdf", top_k: int = 0, top_p: float = 1.0,
                   impl="reference"):
@@ -253,6 +254,7 @@ def ssd(x, dt, a_log, b_mat, c_mat, d_vec, *, chunk, init_state=None,
         return_state=return_state, interpret=(impl == "pallas_interpret"))
 
 
+# lint: allow(impl-dispatch) -- single-token O(H*N) elementwise recurrence with no kernel tier; the reference IS the implementation
 def ssd_decode(x, dt, a_log, b_vec, c_vec, d_vec, state):
     return ref.ssd_decode_ref(x, dt, a_log, b_vec, c_vec, d_vec, state)
 

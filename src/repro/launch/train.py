@@ -66,8 +66,8 @@ def main():
 
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"cluster={args.nodes}x{args.devs_per_node}")
-    exp = RLHFExperiment(cfg, cfg, cluster, exp_cfg)
-    print(exp.plan)
+    run = RLHFExperiment(cfg, cfg, cluster, exp_cfg)
+    print(run.plan)
     if args.plan_only:
         return
 
@@ -78,14 +78,14 @@ def main():
 
     for step in range(args.steps):
         t0 = time.time()
-        out = exp.run_iteration(jax.random.PRNGKey(step))
+        out = run.run_iteration(jax.random.PRNGKey(step))
         print(f"step {step}: {time.time()-t0:.1f}s "
               f"actor_loss={out['actor_stats']['loss']:+.4f} "
               f"reward={float(out['rewards'].mean()):+.3f}", flush=True)
         if mgr and (step + 1) % 5 == 0:
             mgr.save_async(step + 1, {
-                "actor": exp.models["actor"].params,
-                "critic": exp.models["critic"].params})
+                "actor": run.models["actor"].params,
+                "critic": run.models["critic"].params})
     if mgr:
         mgr.wait()
     print("done")

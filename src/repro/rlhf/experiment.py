@@ -120,6 +120,14 @@ class RLHFExperiment:
                  fault_injector: Optional[FLT.FaultInjector] = None):
         self.actor_cfg, self.critic_cfg, self.exp = actor_cfg, critic_cfg, exp
         self.cluster = cluster
+        if exp.packed_training:
+            # fail at construction with one actionable line, not at trace
+            # time deep inside a recurrent mixer (NotImplementedError)
+            from repro.analysis.verify import packed_mixer_error
+            for cfg in (actor_cfg, critic_cfg):
+                msg = packed_mixer_error(cfg)
+                if msg:
+                    raise ValueError(msg)
         self.graph = DFG.build_ppo(
             actor_cfg, critic_cfg, batch=exp.batch, prompt_len=exp.prompt_len,
             gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches,

@@ -1,0 +1,275 @@
+"""Static plan verifier (repro.analysis.verify): rule-by-rule mutation
+coverage, the config-zoo sweep, a seeded-random agreement test (every
+search-emitted plan verifies clean; every seeded mutation is flagged with
+exactly the expected rule), search-side candidate pruning that preserves
+the winning plan's cost, and the runtime's deploy/replan gate."""
+
+import dataclasses
+import random
+
+import pytest
+
+from repro import hw
+from repro.analysis.verify import (Diagnostic, PlanVerificationError,
+                                   assert_valid, check_assignment, errors,
+                                   filter_candidates, packed_mixer_error,
+                                   verify, verify_graph)
+from repro.configs import ARCHS
+from repro.core import dfg as DFG
+from repro.core import search as SRCH
+from repro.core.dfg import DataflowGraph, FunctionCall, TRAIN, Workload
+from repro.core.estimator import CostModel
+from repro.core.plan import (Assignment, Cluster, DeviceMesh, ExecutionPlan,
+                             ParallelStrategy, symmetric_plan)
+from repro.core.simulator import max_mem_per_device
+
+TOY = Cluster(n_nodes=2, devs_per_node=4, chip=hw.HOST_CPU)
+
+
+def _ppo(cfg, **kw):
+    kw.setdefault("batch", 4)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("gen_len", 8)
+    kw.setdefault("n_minibatches", 2)
+    return DFG.build_ppo(cfg, cfg, **kw)
+
+
+def _sym(dfg, cluster=TOY, dp=None):
+    n = cluster.n_nodes * cluster.devs_per_node
+    s = ParallelStrategy(dp=dp or n, tp=1, pp=1, mbs=2)
+    return symmetric_plan([c.name for c in dfg.calls], cluster, s)
+
+
+def _rules(diags):
+    return sorted({d.rule for d in diags})
+
+
+# ------------------------------------------------------------ rule coverage
+
+def test_clean_symmetric_plan_has_no_errors():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    diags = verify(g, _sym(g))
+    assert not errors(diags)
+    # the symmetric plan serializes concurrent inference: reported as warns
+    assert "concurrent-overlap" in _rules(diags)
+
+
+def test_mesh_outside_cluster_is_error():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    plan = _sym(g)
+    bad = Assignment(DeviceMesh(5, 1, 0, 4), ParallelStrategy(4, 1, 1, 2))
+    plan.assignments["ref_inf"] = bad
+    assert "mesh-fits" in _rules(errors(verify(g, plan)))
+
+
+def test_missing_assignment_is_error():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    plan = _sym(g)
+    del plan.assignments["reward_inf"]
+    errs = errors(verify(g, plan))
+    assert _rules(errs) == ["missing-assignment"]
+    assert errs[0].call == "reward_inf"
+
+
+def test_duplicated_train_call_is_error():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    dup = dataclasses.replace(g.calls[-2], name="actor_train2")
+    g2 = DataflowGraph(g.calls + [dup], "ppo")
+    errs = errors(verify_graph(g2))
+    assert any(d.rule == "train-once" and d.model == "actor" for d in errs)
+
+
+def test_stripped_version_edge_is_error():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    calls = [dataclasses.replace(c, trainable=False)
+             if c.name == "actor_gen" else c for c in g.calls]
+    errs = errors(verify_graph(DataflowGraph(calls, "ppo")))
+    assert any(d.rule == "version-edge" and d.call == "actor_gen"
+               for d in errs)
+
+
+def test_oversized_model_is_memory_error():
+    g = _ppo(ARCHS["llama-70b"], prompt_len=64, gen_len=64)
+    cl = Cluster(n_nodes=1, devs_per_node=4)  # 70B on 4 v5e chips
+    plan = _sym(g, cl, dp=4)
+    assert "mem-cap" in _rules(errors(verify(g, plan)))
+
+
+def test_pipeline_deeper_than_layers_is_error():
+    cfg = ARCHS["llama-7b"].reduced()
+    call = _ppo(cfg).by_name["actor_train"]
+    mesh = TOY.full_mesh()
+    asg = Assignment(mesh, ParallelStrategy(1, 1, 8, 8))
+    if cfg.num_layers >= 8:
+        pytest.skip("reduced config grew; pick a deeper pp")
+    ds = check_assignment(call, asg, TOY)
+    assert any(d.rule == "strategy-divides" and d.severity == "error"
+               for d in ds)
+
+
+def test_unfillable_pipeline_is_error():
+    cfg = ARCHS["llama-13b"]  # enough layers for pp=4
+    call = _ppo(cfg).by_name["actor_train"]
+    asg = Assignment(DeviceMesh(0, 2, 0, 4), ParallelStrategy(1, 2, 4, 2))
+    ds = check_assignment(call, asg, Cluster(2, 4),
+                          mem_cap=float("inf"))
+    assert any(d.rule == "strategy-divides" and "fill" in d.message
+               for d in ds)
+
+
+def test_packed_on_recurrent_mixer_is_error():
+    g = _ppo(ARCHS["mamba2-1.3b"].reduced(), packed=True)
+    errs = errors(verify_graph(g))
+    assert any(d.rule == "packed-recurrent" for d in errs)
+    # attention-only config is fine packed
+    g2 = _ppo(ARCHS["llama-7b"].reduced(), packed=True)
+    assert not any(d.rule == "packed-recurrent" for d in verify_graph(g2))
+
+
+def test_packed_mixer_error_message_is_actionable():
+    msg = packed_mixer_error(ARCHS["recurrentgemma-9b"])
+    assert "lru" in msg and "packed_training=False" in msg
+    assert packed_mixer_error(ARCHS["llama-7b"]) is None
+
+
+def test_assert_valid_raises_with_diagnostics():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    plan = _sym(g)
+    del plan.assignments["ref_inf"]
+    with pytest.raises(PlanVerificationError) as ei:
+        assert_valid(g, plan, context="unit")
+    assert ei.value.diagnostics
+    assert all(isinstance(d, Diagnostic) for d in ei.value.diagnostics)
+    assert "missing-assignment" in str(ei.value)
+
+
+# -------------------------------------------------------------- config zoo
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_config_zoo_symmetric_ppo_verifies_clean(name):
+    g = _ppo(ARCHS[name].reduced())
+    assert not errors(verify(g, _sym(g)))
+
+
+# -------------------------------------------- agreement with search/runtime
+
+MUTATIONS = ("illegal-mesh", "strip-version-edge", "duplicate-train",
+             "drop-assignment")
+EXPECTED_RULE = {"illegal-mesh": "mesh-fits",
+                 "strip-version-edge": "version-edge",
+                 "duplicate-train": "train-once",
+                 "drop-assignment": "missing-assignment"}
+
+
+def _mutate(g, plan, kind, rng):
+    """Apply one seeded mutation; returns (graph, plan)."""
+    name = rng.choice([c.name for c in g.calls])
+    if kind == "illegal-mesh":
+        plan = plan.copy()
+        plan.assignments[name] = Assignment(
+            DeviceMesh(TOY.n_nodes + rng.randrange(1, 4), 1, 0, 4),
+            ParallelStrategy(4, 1, 1, 2))
+        return g, plan
+    if kind == "strip-version-edge":
+        trainable = [c.name for c in g.calls
+                     if c.trainable and c.call_type != TRAIN]
+        victim = rng.choice(trainable)
+        calls = [dataclasses.replace(c, trainable=False)
+                 if c.name == victim else c for c in g.calls]
+        return DataflowGraph(calls, g.algorithm), plan
+    if kind == "duplicate-train":
+        tr = rng.choice([c for c in g.calls if c.call_type == TRAIN])
+        dup = dataclasses.replace(tr, name=tr.name + "_dup")
+        plan = plan.copy()
+        plan.assignments[dup.name] = plan.assignments[tr.name]
+        return DataflowGraph(g.calls + [dup], g.algorithm), plan
+    if kind == "drop-assignment":
+        plan = plan.copy()
+        del plan.assignments[name]
+        return g, plan
+    raise AssertionError(kind)
+
+
+def test_search_outputs_verify_clean_and_mutations_are_flagged():
+    """Seeded-random agreement: plans the MCMC search emits on the test
+    grid produce zero error diagnostics (no false positives), while every
+    seeded mutation is flagged with exactly its expected rule."""
+    cfg = ARCHS["llama-7b"].reduced()
+    g = _ppo(cfg)
+    for seed in range(4):
+        res = SRCH.mcmc_search(g, TOY, CostModel(TOY), iters=40, seed=seed)
+        assert not errors(verify(g, res.best_plan)), \
+            f"false positive on search output (seed {seed})"
+        rng = random.Random(1000 + seed)
+        for kind in MUTATIONS:
+            mg, mp = _mutate(g, res.best_plan, kind, rng)
+            got = _rules(errors(verify(mg, mp)))
+            assert EXPECTED_RULE[kind] in got, \
+                f"{kind} not flagged (seed {seed}): {got}"
+
+
+def test_replan_outputs_verify_clean():
+    cfg = ARCHS["llama-7b"].reduced()
+    g = _ppo(cfg)
+    cost = CostModel(TOY)
+    base = SRCH.mcmc_search(g, TOY, cost, iters=30, seed=0).best_plan
+    for avoid in ((), (1,)):
+        plan = SRCH.replan_on_topology(g, TOY, cost, base_plan=base,
+                                       iters=20, avoid_nodes=avoid)
+        assert not errors(verify(g, plan))
+
+
+# ------------------------------------------------------------ search pruning
+
+def test_search_prunes_candidates_without_changing_winner():
+    """On a grid where whole-pod single-call layouts OOM a v5e chip the
+    verifier must prune >0 candidates, and — pruning being monotone — the
+    winning plan's cost must be unchanged vs the unpruned search."""
+    cl = Cluster(n_nodes=4, devs_per_node=8)
+    g = _ppo(ARCHS["llama-7b"], batch=8, prompt_len=128, gen_len=128)
+    pruned = SRCH.search(g, cl, iters=120, seed=0)
+    plain = SRCH.search(g, cl, iters=120, seed=0, static_prune=False)
+    assert pruned.pruned > 0
+    assert plain.pruned == 0
+    assert pruned.best_time == pytest.approx(plain.best_time)
+    # and the emitted winner is genuinely feasible
+    assert max_mem_per_device(g, pruned.best_plan, CostModel(cl)) \
+        < cl.chip.hbm_bytes
+    assert not errors(verify(g, pruned.best_plan))
+
+
+def test_filter_candidates_counts_and_raises_when_empty():
+    cl = Cluster(n_nodes=1, devs_per_node=4)  # 70B cannot fit at all
+    g = _ppo(ARCHS["llama-70b"], prompt_len=64, gen_len=64)
+    cands = SRCH.candidate_assignments(g, cl)
+    with pytest.raises(PlanVerificationError) as ei:
+        filter_candidates(g, cl, cands)
+    assert "no valid candidate" in str(ei.value).replace("-", " ")
+
+    cfg = ARCHS["llama-7b"].reduced()
+    g2 = _ppo(cfg)
+    cands2 = SRCH.candidate_assignments(g2, TOY)
+    kept, pruned = filter_candidates(g2, TOY, cands2)
+    assert pruned == 0  # reduced configs fit everywhere: nothing to prune
+    assert {k: len(v) for k, v in kept.items()} \
+        == {k: len(v) for k, v in cands2.items()}
+
+
+def test_search_rejects_broken_graph_up_front():
+    g = _ppo(ARCHS["llama-7b"].reduced())
+    dup = dataclasses.replace(g.by_name["actor_train"], name="actor_train2")
+    bad = DataflowGraph(g.calls + [dup], "ppo")
+    with pytest.raises(PlanVerificationError):
+        SRCH.mcmc_search(bad, TOY, CostModel(TOY), iters=5, seed=0)
+
+
+# ------------------------------------------------------------- runtime gate
+
+def test_experiment_rejects_packed_recurrent_config_early():
+    from repro.rlhf.experiment import ExperimentConfig, RLHFExperiment
+    cfg = ARCHS["mamba2-1.3b"].reduced()
+    exp = ExperimentConfig(batch=2, prompt_len=4, gen_len=4,
+                           packed_training=True)
+    with pytest.raises(ValueError, match="packed_training=False"):
+        RLHFExperiment(cfg, cfg, Cluster(1, 1, chip=hw.HOST_CPU), exp,
+                       search=False)

@@ -822,3 +822,78 @@ def test_injector_notice_queues_never_raises():
     assert notes[0].node == 1 and notes[0].deadline_s == 5.0
     assert inj.take_notices() == []  # drained
     assert inj.fired == [("notice", "rew", 2)]
+
+
+# ------------------------------------------------- static plan verification
+
+def test_chaos_replans_verify_clean_on_real_graph():
+    """Every plan replan_on_topology builds under duress — host kill
+    (shrunk cluster), preemption notice (avoid_nodes), host gain (grown
+    cluster) — verifies with zero error diagnostics before any reshard."""
+    from repro.analysis.verify import errors, verify
+    from repro.configs import ARCHS
+    from repro.core import dfg as DFG
+    from repro.core import search as SRCH
+    from repro.core.estimator import CostModel
+
+    cfg = ARCHS["llama-7b"].reduced()
+    g = DFG.build_ppo(cfg, cfg, batch=4, prompt_len=8, gen_len=8,
+                      n_minibatches=2)
+    base_cl = Cluster(n_nodes=2, devs_per_node=4, chip=hw.HOST_CPU)
+    base = SRCH.mcmc_search(g, base_cl, CostModel(base_cl), iters=30,
+                            seed=0).best_plan
+
+    scenarios = {
+        "kill": dict(cluster=Cluster(1, 4, chip=hw.HOST_CPU)),
+        "preempt": dict(cluster=base_cl, avoid_nodes=(1,)),
+        "add_hosts": dict(cluster=Cluster(3, 4, chip=hw.HOST_CPU)),
+    }
+    for name, sc in scenarios.items():
+        cl = sc["cluster"]
+        plan = SRCH.replan_on_topology(
+            g, cl, CostModel(cl), base_plan=base, iters=20,
+            avoid_nodes=sc.get("avoid_nodes", ()))
+        diags = verify(g, plan)
+        assert not errors(diags), f"{name}: {[str(d) for d in errors(diags)]}"
+        if "avoid_nodes" in sc:
+            m = cl.devs_per_node
+            doomed = {d for n in sc["avoid_nodes"]
+                      for d in range(n * m, (n + 1) * m)}
+            for asg in plan.assignments.values():
+                assert not (asg.mesh.devices(m) & doomed)
+
+
+def test_runtime_surfaces_diagnostics_for_broken_replanner():
+    """A replanner that emits a plan for the dead topology must fail the
+    replan gate with a Diagnostic-carrying PlanVerificationError — not a
+    deep reshard traceback."""
+    from repro.analysis.verify import PlanVerificationError
+
+    dfg, plan, executors, models, sharding_for, _rp, _c = _toy(sleep_s=0.0)
+    inj = FLT.FaultInjector().kill_host(1, at_call="rew", at_iteration=0)
+
+    def broken_replanner(new_cluster, event):
+        # keeps the pre-kill 2-node mesh: does not fit the survivor cluster
+        stale = DeviceMesh(0, 2, 0, 2)
+        a = Assignment(stale, ParallelStrategy(4, 1, 1, 1))
+        return ExecutionPlan({n: a for n in ("gen", "rew", "atrain",
+                                             "ctrain")}, new_cluster)
+
+    eng = RuntimeEngine(dfg, plan, executors, models,
+                        sharding_for=sharding_for, fault_injector=inj,
+                        replanner=broken_replanner)
+    with pytest.raises(PlanVerificationError) as ei:
+        eng.run(lambda t: {"prompts": t}, steps=2)
+    assert any(d.rule == "mesh-fits" for d in ei.value.diagnostics)
+
+
+def test_engine_deploy_rejects_incomplete_plan():
+    from repro.analysis.verify import PlanVerificationError
+
+    dfg, plan, executors, models, sharding_for, _rp, _c = _toy(sleep_s=0.0)
+    del plan.assignments["rew"]
+    with pytest.raises(PlanVerificationError) as ei:
+        RuntimeEngine(dfg, plan, executors, models,
+                      sharding_for=sharding_for)
+    assert any(d.rule == "missing-assignment" and d.call == "rew"
+               for d in ei.value.diagnostics)
