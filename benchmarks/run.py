@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,table6,fig12,fig13,fig14,"
                          "fig15,fig16,fig17,kernels,roofline,rollout,serve,"
-                         "moe,pipeline,chaos,packed")
+                         "moe,pipeline,chaos,packed,spec")
     ap.add_argument("--fast", action="store_true",
                     help="fewer MCMC iterations (CI-friendly)")
     args = ap.parse_args()
@@ -27,7 +27,7 @@ def main() -> None:
     from benchmarks import (chaos_bench, estimator_acc, kernels_bench,
                             moe_bench, packed_bench, paper_figs,
                             pipeline_bench, roofline_table, rollout_bench,
-                            serve_bench)
+                            serve_bench, spec_bench)
     it = 150 if args.fast else 600
 
     benches = {
@@ -48,6 +48,7 @@ def main() -> None:
         "pipeline": lambda: pipeline_bench.run(smoke=args.fast),
         "chaos": lambda: chaos_bench.run(smoke=args.fast, scenario="all"),
         "packed": lambda: packed_bench.run(smoke=args.fast),
+        "spec": lambda: spec_bench.run(smoke=args.fast),
     }
     only = args.only.split(",") if args.only else list(benches)
 

@@ -10,7 +10,11 @@ queued work into the freed slot, and only ever holds ``ceil(len /
 block_size)`` KV blocks per live sequence.
 
 Reports useful-tokens/s (requested tokens only; the baseline's overshoot
-is waste, not throughput) and peak KV bytes for both engines.
+is waste, not throughput), peak KV bytes, and per-request latency
+percentiles (p50/p99, seconds from cohort submission to completion) for
+both engines — the bucketed baseline completes every request at the
+batch's end, so its p50 equals its p99 equals the wall time; continuous
+batching retires short requests early and the spread shows it.
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json out.json
 
@@ -90,17 +94,22 @@ def bench_serve(n_req=24, n_slots=8, block_size=16, max_prompt=28,
     st = cont.stats()
 
     tok_s_b, tok_s_c = useful / dt_b, useful / dt_c
+    # bucketed run-to-completion: every request completes when the whole
+    # batch does, so each request's latency is the full wall time
+    lat_b = {"p50": dt_b, "p99": dt_b, "n": n_req}
+    lat_c = st["latency_s"]
     summary = {
         "model": cfg.name,
         "workload": {"requests": n_req, "useful_tokens": useful,
                      "max_new": max(new), "mean_new": sum(new) / n_req,
                      "mean_prompt": sum(len(p) for p in prompts) / n_req},
         "bucketed": {"tok_s": tok_s_b, "kv_peak_bytes": kv_b,
-                     "wall_s": dt_b},
+                     "wall_s": dt_b, "latency_s": lat_b},
         "continuous": {"tok_s": tok_s_c, "kv_peak_bytes": kv_c,
                        "wall_s": dt_c, "steps": st["steps"] - steps0,
                        "peak_blocks": st["peak_blocks"],
-                       "preemptions": st["preemptions"]},
+                       "preemptions": st["preemptions"],
+                       "latency_s": lat_c},
         "speedup": tok_s_c / tok_s_b,
         "kv_ratio": kv_c / kv_b,
     }
@@ -113,6 +122,9 @@ def bench_serve(n_req=24, n_slots=8, block_size=16, max_prompt=28,
         ("serve/speedup", 0.0,
          f"continuous_over_bucketed={summary['speedup']:.2f}x;"
          f"kv_ratio={summary['kv_ratio']:.2f}"),
+        ("serve/latency", 0.0,
+         f"cont_p50={lat_c['p50']:.3f}s;cont_p99={lat_c['p99']:.3f}s;"
+         f"bucketed_p50={lat_b['p50']:.3f}s"),
     ]
     return rows, summary
 

@@ -18,8 +18,8 @@ import dataclasses
 from typing import Iterable, Optional
 
 from repro.configs.base import ATTN, ModelConfig
-from repro.core.dfg import (DataflowGraph, FunctionCall, TRAIN, base_name,
-                            iteration_of, unroll_window)
+from repro.core.dfg import (DataflowGraph, FunctionCall, GENERATE, TRAIN,
+                            base_name, iteration_of, unroll_window)
 from repro.core.estimator import BF16, CostModel
 from repro.core.plan import Assignment, Cluster, ExecutionPlan
 
@@ -80,6 +80,20 @@ def packed_mixer_error(cfg: ModelConfig) -> Optional[str]:
             f"packed_training=False or choose an attention-only config")
 
 
+def _spec_mixer_error(cfg: ModelConfig) -> Optional[str]:
+    """Non-None when ``cfg`` cannot take part in a speculative
+    draft-and-verify pair: rejection needs rollback-free caches, i.e.
+    attention-only decode (mirrors ``models.spec.spec_supported`` without
+    importing the model layer)."""
+    if cfg.family == "encdec" or cfg.prefix_len:
+        return "speculative decoding requires a decoder-only, prefix-free model"
+    bad = sorted({s.kind for s in cfg.layers if s.kind != ATTN})
+    if bad:
+        return (f"speculative decoding requires attention-only mixers, "
+                f"but '{cfg.name}' has {'/'.join(bad)} layers")
+    return None
+
+
 # -------------------------------------------------------------- graph rules
 
 def verify_graph(dfg: DataflowGraph) -> list[Diagnostic]:
@@ -136,6 +150,35 @@ def verify_graph(dfg: DataflowGraph) -> list[Diagnostic]:
                 out.append(Diagnostic(SEV_ERROR, "packed-recurrent",
                                       call=c.name, model=c.model_name,
                                       message=msg))
+
+    # speculative rollout edges: a GENERATE call feeding another GENERATE
+    # call is a draft-and-verify pair (build_ppo(draft=...)'s draft_gen ->
+    # actor_gen edge).  spec_generate raises at dispatch on a vocab mismatch
+    # or a cache that cannot be rolled back; catch both statically.
+    produced_by = {o: c for c in dfg.calls for o in c.outputs}
+    for c in dfg.calls:
+        if c.call_type != GENERATE or c.config is None:
+            continue
+        for inp in c.inputs:
+            d = produced_by.get(inp)
+            if (d is None or d.call_type != GENERATE or d.config is None
+                    or d.name == c.name):
+                continue
+            for role, cfg in (("target", c), ("draft", d)):
+                msg = _spec_mixer_error(cfg.config)
+                if msg:
+                    out.append(Diagnostic(
+                        SEV_ERROR, "spec-draft", call=cfg.name,
+                        model=cfg.model_name,
+                        message=f"{role} of speculative pair "
+                                f"'{d.name}' -> '{c.name}': {msg}"))
+            if d.config.vocab_size != c.config.vocab_size:
+                out.append(Diagnostic(
+                    SEV_ERROR, "spec-draft", call=c.name, model=c.model_name,
+                    message=(f"draft '{d.name}' vocab "
+                             f"{d.config.vocab_size} != target vocab "
+                             f"{c.config.vocab_size}; rejection sampling "
+                             "needs a shared token space")))
     return out
 
 

@@ -110,11 +110,21 @@ def build_ppo(actor: ModelConfig, critic: ModelConfig, *, batch: int,
               prompt_len: int, gen_len: int, n_minibatches: int = 8,
               reward: Optional[ModelConfig] = None,
               ref: Optional[ModelConfig] = None,
-              packed: bool = False) -> DataflowGraph:
+              packed: bool = False,
+              draft: Optional[ModelConfig] = None) -> DataflowGraph:
     """The paper's six-call PPO workflow (Fig. 4).  ``packed`` marks the
     train calls as running on the packed (total_tokens,) layout, so cost
     estimation keys them on real token counts (worst case at build time:
-    batch * seq_len; runtime measurements refine per-total entries)."""
+    batch * seq_len; runtime measurements refine per-total entries).
+
+    ``draft`` adds speculative rollout: a seventh call, ``draft_gen``, runs
+    the (frozen) draft model's proposal stream for the actor's generation.
+    It is a first-class planned call — the searcher places it on its own
+    sub-mesh and the simulator costs it and its realloc edges like any
+    other model — with a data edge into ``actor_gen`` (the verify loop
+    consumes the proposals), so the two overlap in time only through the
+    runtime's cycle-level interleaving, never in the plan's dependency
+    order."""
     reward = reward or critic
     ref = ref or actor
     gen = Workload(batch, prompt_len, gen_len)
@@ -122,9 +132,16 @@ def build_ppo(actor: ModelConfig, critic: ModelConfig, *, batch: int,
     trn = Workload(batch, prompt_len, gen_len, n_minibatches,
                    total_tokens=(batch * (prompt_len + gen_len)
                                  if packed else 0))
-    calls = [
+    actor_gen_inputs = ("prompts",) if draft is None \
+        else ("prompts", "draft_seq")
+    calls = []
+    if draft is not None:
+        calls.append(
+            FunctionCall("draft_gen", "draft", GENERATE, draft, gen,
+                         ("prompts",), ("draft_seq",)))
+    calls += [
         FunctionCall("actor_gen", "actor", GENERATE, actor, gen,
-                     ("prompts",), ("seq", "logp", "gen_mask"),
+                     actor_gen_inputs, ("seq", "logp", "gen_mask"),
                      trainable=True),
         FunctionCall("reward_inf", "reward", INFERENCE, reward, inf,
                      ("seq",), ("rewards",)),

@@ -68,6 +68,15 @@ class CallCost:
         return max(self.compute, self.hbm) + self.comm + self.bubble
 
 
+def spec_expected_committed(accept_rate: float, k: int) -> float:
+    """E[tokens committed per draft-and-verify cycle] = accepted prefix + 1
+    resample/bonus token, under i.i.d. per-token accept rate ``a``:
+    ``(1 - a^(k+1)) / (1 - a)`` (truncated geometric).  Shared convention
+    with ``models.spec.SpecController.expected_committed``."""
+    a = min(max(float(accept_rate), 0.0), 0.999999)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
 def assignment_key(asg: Assignment) -> str:
     """Serializable identity of an assignment for measurement keying.
 
@@ -386,6 +395,105 @@ class CostModel:
         return CallCost(pre.compute + steps * comp, pre.hbm + steps * mem,
                         pre.comm + steps * comm_step,
                         pre.bubble)
+
+    # ---- speculative decoding (draft-and-verify rollout) ---------------------
+    def decode_step_time(self, cfg: ModelConfig, batch: int, ctx_len: int,
+                         asg: Assignment, n_positions: int = 1) -> float:
+        """Roofline of ONE fused decode/verify dispatch scoring
+        ``n_positions`` tokens per sequence.  Compute scales with positions;
+        the memory traffic (weight shard + KV read) is position-independent
+        — the bandwidth amortization speculative verify exploits: scoring
+        k+1 positions costs barely more than one while decode is
+        memory-bound."""
+        s, mesh, p = asg.strategy, asg.mesh, self.prof
+        chip = self._chip()
+        flops = 2.0 * cfg.active_param_count() * batch * n_positions
+        comp = (flops / (mesh.size * chip.peak_flops_bf16 * p.eff_decode)
+                * p.compute_scale)
+        param_read = cfg.param_count() * BF16 / (s.tp * s.pp) * s.mbs
+        cache_read = kv_cache_bytes(cfg, batch, ctx_len) / (s.dp * s.tp * s.pp)
+        mem = (param_read + cache_read) / chip.hbm_bw * p.hbm_scale
+        act = batch * n_positions * cfg.d_model * BF16 / s.dp
+        comm = 0.0
+        if s.tp > 1:
+            wire = hw.all_reduce_bytes(act, s.tp)
+            comm += (cfg.num_layers / s.pp) * 2 * (
+                wire / self._tp_bw(mesh) * p.comm_scale + p.coll_lat)
+        if s.pp > 1:
+            comm += (s.pp - 1) * (act / self.cluster.intra_node_bw
+                                  * p.comm_scale + p.p2p_lat)
+        return max(comp, mem) + comm
+
+    def spec_cycle_time(self, target_cfg: ModelConfig,
+                        draft_cfg: ModelConfig, batch: int, ctx_len: int,
+                        k: int, asg: Assignment,
+                        draft_asg: Assignment) -> float:
+        """One draft-and-verify cycle: k+1 draft decode dispatches (the last
+        is the consume-only catch-up step) + one target verify dispatch
+        scoring k+1 positions."""
+        draft_t = (k + 1) * self.decode_step_time(draft_cfg, batch, ctx_len,
+                                                  draft_asg)
+        verify_t = self.decode_step_time(target_cfg, batch, ctx_len, asg,
+                                         n_positions=k + 1)
+        return draft_t + verify_t
+
+    def spec_cycle_time_fn(self, target_cfg: ModelConfig,
+                           draft_cfg: ModelConfig, batch: int, ctx_len: int,
+                           asg: Assignment, draft_asg: Assignment):
+        """``k -> seconds`` closure binding this calibrated model — plugs
+        directly into ``models.spec.SpecController(cycle_cost=...)`` so the
+        rollout's adaptive draft length is driven by the same estimator
+        that placed both models."""
+        return lambda k: self.spec_cycle_time(target_cfg, draft_cfg, batch,
+                                              ctx_len, k, asg, draft_asg)
+
+    # accept-rate feedback: measured per-model EMAs, mirroring
+    # record_measurement for wall times
+    def record_accept_rate(self, model_name: str, rate: float,
+                           decay: float = 0.9) -> None:
+        """Fold one rollout's measured draft accept rate into the per-model
+        EMA that ``spec_generate_time``/``optimal_spec_k`` consume."""
+        rate = min(max(float(rate), 0.0), 1.0)
+        if not hasattr(self, "_accept_rates"):
+            self._accept_rates: dict[str, float] = {}
+        prev = self._accept_rates.get(model_name)
+        self._accept_rates[model_name] = (
+            rate if prev is None else decay * prev + (1.0 - decay) * rate)
+
+    def accept_rate(self, model_name: str, default: float = 0.7) -> float:
+        return getattr(self, "_accept_rates", {}).get(model_name, default)
+
+    def spec_generate_time(self, call: FunctionCall, asg: Assignment,
+                           draft_cfg: ModelConfig, draft_asg: Assignment, *,
+                           k: int, accept_rate: float | None = None) -> float:
+        """Estimated wall time of a GENERATE call executed speculatively:
+        both prefills + enough cycles to commit ``gen_len`` tokens at the
+        truncated-geometric expectation of rejection sampling."""
+        w = call.workload
+        a = (accept_rate if accept_rate is not None
+             else self.accept_rate(call.model_name))
+        per_cycle = spec_expected_committed(a, k)
+        cycles = max(w.gen_len, 1) / per_cycle
+        ctx = w.prompt_len + w.gen_len // 2
+        cyc = self.spec_cycle_time(call.config, draft_cfg, w.batch, ctx, k,
+                                   asg, draft_asg)
+        pre = self._inference_cost(
+            call.config, Workload(w.batch, w.prompt_len, 0), asg).total
+        dpre = self._inference_cost(
+            draft_cfg, Workload(w.batch, w.prompt_len, 0), draft_asg).total
+        return pre + dpre + cycles * cyc
+
+    def optimal_spec_k(self, call: FunctionCall, asg: Assignment,
+                       draft_cfg: ModelConfig, draft_asg: Assignment, *,
+                       k_max: int = 8,
+                       accept_rate: float | None = None) -> int:
+        """Draft length minimizing the estimated speculative rollout time
+        (includes k=1; callers compare against the non-speculative
+        ``call_time`` separately to decide whether to speculate at all)."""
+        return min(range(1, k_max + 1),
+                   key=lambda k: self.spec_generate_time(
+                       call, asg, draft_cfg, draft_asg, k=k,
+                       accept_rate=accept_rate))
 
     # ---- memory --------------------------------------------------------------
     def static_mem_per_dev(self, cfg: ModelConfig, asg: Assignment,

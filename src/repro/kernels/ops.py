@@ -94,6 +94,37 @@ def paged_decode_mha(q, k_pool, v_pool, block_table, *, cache_len,
         interpret=(impl == "pallas_interpret"))
 
 
+def paged_verify_mha(q, k_pool, v_pool, block_table, *, q_positions,
+                     impl="reference"):
+    """Multi-query (speculative verify-step) attention over a paged KV cache.
+
+    q: (B, K, Hq, D) — the spec_k + 1 verify tokens, whose KV has already
+    been written into the pool; q_positions: (B, K) their absolute
+    positions.  Query j attends every logical position <= q_positions[b, j]
+    so one prefill-shaped dispatch scores the whole draft window.  Returns
+    (B, K, Hq, D).  See ``ref.paged_verify_mha_ref`` for the parity
+    contract with the single-token decode path."""
+    _check(impl)
+    if impl == "stub":
+        return q + 0.0 * (k_pool.sum() + v_pool.sum())
+    if impl == "reference":
+        return ref.paged_verify_mha_ref(q, k_pool, v_pool, block_table,
+                                        q_positions=q_positions)
+    # "pallas" / "pallas_interpret": gather the table's block rows (an XLA
+    # gather — the pool is already in HBM-friendly blocks) and run the flash
+    # kernel with explicit positions; causal masking over logical positions
+    # hides every unwritten slot.
+    b, m = block_table.shape
+    _, bs, hkv, d = k_pool.shape
+    k_cache = k_pool[block_table].reshape(b, m * bs, hkv, d)
+    v_cache = v_pool[block_table].reshape(b, m * bs, hkv, d)
+    kv_positions = jnp.broadcast_to(jnp.arange(m * bs)[None], (b, m * bs))
+    return mha(q, k_cache, v_cache, causal=True, window=None,
+               q_positions=q_positions, kv_positions=kv_positions,
+               impl="pallas_interpret" if impl == "pallas_interpret"
+               else "pallas")
+
+
 def grouped_ffn(xs, group_sizes, w_gate, w_in, w_out, *, act="silu",
                 impl="reference"):
     """Grouped gated expert FFN over expert-sorted rows (dropless MoE).
@@ -194,10 +225,13 @@ def sample_logits(logits, key=None, *, temperature: float = 1.0,
                   impl="reference"):
     """Fused sampling + logprob extraction from decode logits.
 
-    logits: (B, V).  Returns (token (B,) int32, logprob (B,) f32) where the
-    logprob is under the *untempered, untruncated* distribution (PPO
-    convention — the scorer sees the full softmax).  The fusion never
-    materializes a (B, V) ``log_softmax``; greedy when ``key`` is None.
+    logits: (B, V) or (B, K, V) — the 3-D form scores K positions per
+    dispatch (the speculative verify step's k+1 distributions) by folding K
+    into the row axis; one ``key`` covers all positions.  Returns (token
+    (B,)/(B, K) int32, logprob (B,)/(B, K) f32) where the logprob is under
+    the *untempered, untruncated* distribution (PPO convention — the scorer
+    sees the full softmax).  The fusion never materializes a (B, V)
+    ``log_softmax``; greedy when ``key`` is None.
 
     ``top_k`` (0 = off) and ``top_p`` (1.0 = off) truncate the *sampling*
     distribution: logits outside the kept set are masked to NEG_INF before
@@ -222,6 +256,9 @@ def sample_logits(logits, key=None, *, temperature: float = 1.0,
     if top_k < 0 or not 0.0 < top_p <= 1.0:
         raise ValueError(f"bad truncation top_k={top_k} top_p={top_p}")
     lg = logits.astype(jnp.float32)
+    lead = lg.shape[:-1]
+    if lg.ndim == 3:  # (B, K, V): score K positions in one pass
+        lg = lg.reshape(-1, lg.shape[-1])
     truncated = bool(top_k and top_k < lg.shape[-1]) or top_p < 1.0
     lse = None
     if key is None:
@@ -239,7 +276,106 @@ def sample_logits(logits, key=None, *, temperature: float = 1.0,
     if lse is None:
         lse = jax.nn.logsumexp(lg, axis=-1)
     lp = jnp.take_along_axis(lg, tok[:, None], axis=-1)[:, 0] - lse
-    return tok, lp
+    return tok.reshape(lead), lp.reshape(lead)
+
+
+# lint: allow(impl-dispatch) -- all tiers share the jnp body (see docstring)
+def spec_verify(logits, draft_tokens, draft_logits, key=None, *,
+                temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
+                impl="reference"):
+    """Batched rejection sampling for speculative decoding.
+
+    logits: (B, K+1, V) target logits at the verify positions (position i
+    is the distribution *after* consuming token i of the verify window —
+    i < K scores draft token i, position K is the bonus distribution);
+    draft_tokens: (B, K) the draft's proposals; draft_logits: (B, K, V) the
+    draft logits they were sampled from.  Returns
+
+        accept_len (B,) int32  — leading draft tokens accepted, in [0, K]
+        token      (B,) int32  — the committed correction/bonus token
+        token_lp   (B,) f32    — its full-distribution target logprob
+        draft_lps  (B, K) f32  — full-distribution target logprob of every
+                                 draft token (rows [:accept_len] are the
+                                 committed prefix's PPO logprobs)
+
+    Sampled mode (``key`` given): draft token i is accepted with
+    probability min(1, p(x_i)/q(x_i)) where p/q are the *sampling*
+    distributions (temperature + top_k/top_p applied to both); the first
+    rejection resamples from the normalized residual max(0, p - q), and a
+    clean sweep samples the bonus position from p directly (residual with
+    q = 0).  The committed-sequence distribution is exactly the target's —
+    the rejection-sampling invariant.  Greedy mode (``key`` None): accept
+    while the draft token equals the target argmax, correct with the
+    argmax — bit-identical to greedy one-token decoding.
+
+    Returned logprobs are always under the untempered, untruncated target
+    distribution (PPO convention).  Nothing (B, K, V)-shaped beyond the
+    input logits is materialized: scoring uses V-reductions, and only the
+    single rejected position's (B, V) probability rows are formed for the
+    residual draw.  All tiers share the jnp body (V-reductions XLA fuses
+    into the verify step on every backend)."""
+    _check(impl)
+    if top_k < 0 or not 0.0 < top_p <= 1.0:
+        raise ValueError(f"bad truncation top_k={top_k} top_p={top_p}")
+    b, k1, v = logits.shape
+    k = k1 - 1
+    if k < 1 or draft_tokens.shape != (b, k) or draft_logits.shape != (b, k, v):
+        raise ValueError(f"shape mismatch: logits {logits.shape}, "
+                         f"draft_tokens {draft_tokens.shape}, "
+                         f"draft_logits {draft_logits.shape}")
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)  # (B, K+1)
+    draft_lps = jnp.take_along_axis(
+        lg[:, :k], draft_tokens[:, :, None], axis=-1)[..., 0] - lse[:, :k]
+
+    if key is None:
+        tgt = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (B, K+1)
+        ok = draft_tokens == tgt[:, :k]
+        accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=-1),
+                             axis=-1).astype(jnp.int32)
+        token = jnp.take_along_axis(tgt, accept_len[:, None], axis=-1)[:, 0]
+    else:
+        qg = draft_logits.astype(jnp.float32)
+
+        def scaled(x):
+            s = x if temperature == 1.0 else x / max(temperature, 1e-6)
+            if bool(top_k and top_k < v) or top_p < 1.0:
+                flat = _truncate_logits(s.reshape(-1, v), top_k, top_p)
+                s = flat.reshape(s.shape)
+            return s
+
+        pt, qt = scaled(lg), scaled(qg)
+        lp_p = (jnp.take_along_axis(pt[:, :k], draft_tokens[:, :, None],
+                                    axis=-1)[..., 0]
+                - jax.nn.logsumexp(pt[:, :k], axis=-1))
+        lp_q = (jnp.take_along_axis(qt, draft_tokens[:, :, None],
+                                    axis=-1)[..., 0]
+                - jax.nn.logsumexp(qt, axis=-1))
+        ku, kr = jax.random.split(key)
+        u = jax.random.uniform(ku, (b, k))
+        ok = jnp.log(jnp.maximum(u, 1e-38)) < lp_p - lp_q
+        accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=-1),
+                             axis=-1).astype(jnp.int32)
+        r = accept_len[:, None, None]
+        p_probs = jax.nn.softmax(
+            jnp.take_along_axis(pt, r, axis=1)[:, 0], axis=-1)  # (B, V)
+        q_probs = jax.nn.softmax(
+            jnp.take_along_axis(qt, jnp.minimum(r, k - 1), axis=1)[:, 0],
+            axis=-1)
+        q_probs = jnp.where((accept_len < k)[:, None], q_probs, 0.0)
+        resid = jnp.maximum(p_probs - q_probs, 0.0)
+        # fp guard: if p == q to rounding the residual mass underflows —
+        # fall back to the target distribution (the exact-limit behavior)
+        mass = jnp.sum(resid, axis=-1, keepdims=True)
+        resid = jnp.where(mass > 0.0, resid, p_probs)
+        token, _ = _sample_cdf(
+            jnp.where(resid > 0.0, jnp.log(jnp.maximum(resid, 1e-38)),
+                      NEG_INF), kr)
+
+    lg_r = jnp.take_along_axis(lg, accept_len[:, None, None], axis=1)[:, 0]
+    lse_r = jnp.take_along_axis(lse, accept_len[:, None], axis=1)[:, 0]
+    token_lp = jnp.take_along_axis(lg_r, token[:, None], axis=-1)[:, 0] - lse_r
+    return accept_len, token, token_lp, draft_lps
 
 
 def ssd(x, dt, a_log, b_mat, c_mat, d_vec, *, chunk, init_state=None,

@@ -190,6 +190,28 @@ def paged_decode_mha_ref(q, k_pool, v_pool, block_table, *, cache_len):
     return decode_mha_ref(q, k_cache, v_cache, cache_len=cache_len)
 
 
+def paged_verify_mha_ref(q, k_pool, v_pool, block_table, *, q_positions):
+    """Multi-query (speculative verify-step) attention over a paged KV cache.
+
+    q: (B, K, Hq, D) — the K = spec_k + 1 verify tokens of each row;
+    ``q_positions``: (B, K) their absolute positions (consecutive per row).
+    The KV of all K tokens has already been scattered into the pool, so
+    query j attends every logical position <= q_positions[b, j].  The
+    gather order and masked key set at each query position are identical to
+    what :func:`paged_decode_mha_ref` sees for a single-token step at that
+    position — the bit-parity requirement of the rejection-sampling
+    invariant.  Returns (B, K, Hq, D).
+    """
+    b, m = block_table.shape
+    _, bs, hkv, d = k_pool.shape
+    k_cache = k_pool[block_table].reshape(b, m * bs, hkv, d)
+    v_cache = v_pool[block_table].reshape(b, m * bs, hkv, d)
+    kv_positions = jnp.broadcast_to(jnp.arange(m * bs)[None], (b, m * bs))
+    return mha_ref(q, k_cache, v_cache, causal=True, window=None,
+                   q_positions=q_positions, kv_positions=kv_positions,
+                   q_chunk=None)
+
+
 # ---------------------------------------------------------------------------
 # Grouped (dropless MoE) expert FFN
 # ---------------------------------------------------------------------------

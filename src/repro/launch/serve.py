@@ -108,6 +108,18 @@ class ContinuousBatchServer:
     only inspects tokens (EOS / length / admission) at chunk boundaries.
     Rows that finish mid-chunk decode a few throwaway tokens into their own
     (about-to-be-freed) blocks — bounded waste, large dispatch saving.
+
+    Passing ``draft_params``/``draft_cfg`` opts into *speculative*
+    continuous batching (models/spec.py): each dispatch cycle drafts
+    ``spec_k`` tokens per active slot with the small model and verifies
+    them in one prefill-shaped target dispatch; rejection sampling keeps
+    every returned token (and logprob) exactly the target's.  Accepted
+    prefixes keep their KV blocks, rejections truncate the row's block
+    list (``BlockAllocator.truncate_to``).  The draft owns a statically
+    laid-out block pool per slot — preemption/recompute only ever touches
+    target blocks.  EOS and per-request ``max_new`` still apply: committed
+    tokens are scanned in order and any overshoot suffix is discarded
+    (dropping a suffix of exact samples does not bias the distribution).
     """
 
     def __init__(self, cfg, params, *, n_slots: int = 8,
@@ -116,7 +128,9 @@ class ContinuousBatchServer:
                  eos_id=None, temperature: float = 1.0, sampler: str = "cdf",
                  top_k: int = 0, top_p: float = 1.0, impl: str = "reference",
                  pad_id: int = 0, sync_every: int = 4,
-                 prompt_buckets=(16, 32, 64, 128, 256, 512, 1024)):
+                 prompt_buckets=(16, 32, 64, 128, 256, 512, 1024),
+                 draft_params=None, draft_cfg=None, spec_k: int = 4,
+                 spec_controller=None):
         import jax
         import numpy as np
         from repro.models import paged_cache as PC
@@ -124,6 +138,8 @@ class ContinuousBatchServer:
         if cfg.prefix_len and cfg.family != "encdec":
             raise ValueError("ContinuousBatchServer does not support prefix "
                              "(vlm) configs")
+        if (draft_params is None) != (draft_cfg is None):
+            raise ValueError("draft_params and draft_cfg go together")
         self.cfg, self.params = cfg, params
         self.n_slots, self.bs = n_slots, kv_block_size
         self.max_new, self.pad_id = max_new, pad_id
@@ -133,16 +149,36 @@ class ContinuousBatchServer:
         self.sync_every = max(1, sync_every)
         self.prompt_buckets = prompt_buckets
         self.max_len = bucket_of(max_prompt, prompt_buckets) + max_new
+        self.draft_params, self.draft_cfg = draft_params, draft_cfg
+        self.spec_k = spec_k
+        self.spec_controller = spec_controller
+        k_cap = 0
+        if draft_cfg is not None:
+            from repro.models.spec import check_spec_pair
+            check_spec_pair(cfg, draft_cfg)
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            k_cap = (spec_controller.k_max if spec_controller is not None
+                     else spec_k)
+        self._k_cap = k_cap
         # chunked decode can overshoot a row's logical end by sync_every-1
-        # positions before the host trims it — budget table + pool for it
+        # positions before the host trims it (a verify cycle by spec_k) —
+        # budget table + pool for it
         self.max_blocks = PC.needed_blocks(
-            self.max_len + self.sync_every - 1, self.bs)
+            self.max_len + max(self.sync_every - 1, k_cap + 1), self.bs)
         if max_kv_blocks <= 0:  # worst case: every slot at full length
             max_kv_blocks = PC.RESERVED_BLOCKS + n_slots * self.max_blocks
         self.alloc = PC.BlockAllocator(max_kv_blocks, self.bs)
         self.caches = PC.paged_cache_init(
             cfg, n_slots, max_kv_blocks, self.bs, self.max_len, cfg.dtype)
         self.table = np.zeros((n_slots, self.max_blocks), np.int32)
+        if draft_cfg is not None:
+            from repro.models.spec import _draft_table
+            self.d_table = _draft_table(n_slots, self.max_blocks)
+            self.d_caches = PC.paged_cache_init(
+                draft_cfg, n_slots, n_slots * self.max_blocks + 1, self.bs,
+                self.max_len, draft_cfg.dtype)
+            self._d_table_dev = None  # lazily jnp.asarray'd (static)
         self.seq_lens = np.zeros(n_slots, np.int32)
         self.cur_tok = np.zeros(n_slots, np.int32)
         self.slots: list = [None] * n_slots
@@ -155,6 +191,12 @@ class ContinuousBatchServer:
         self.compiles = 0
         self.completion_order: list[int] = []
         self._results: dict = {}
+        self._latencies: dict = {}  # rid -> seconds from serve() entry
+        self._t_serve0 = None
+        self.spec_cycles = 0
+        self.spec_accepted = 0
+        self.spec_proposed = 0
+        self.spec_k_trace: list[int] = []
 
     # -------------------------------------------------------- compiled fns
     def _donate(self):
@@ -191,30 +233,34 @@ class ContinuousBatchServer:
                 run, donate_argnums=(1,) if self._donate() else ())
         return fn
 
-    def _admit_fn(self, plen: int, width: int, sampled: bool):
+    def _admit_fn(self, plen: int, width: int, sampled: bool,
+                  draft: bool = False):
         """Fused batched prefill + first-token sample + paged-cache insert:
         one dispatch admits up to ``width`` same-bucket requests (padding
         rows carry slot index ``n_slots`` — dropped by the scatter — and
         scratch-block table rows).  One program per (prompt bucket, width,
-        sampled?)."""
+        sampled?).  The ``draft`` variant prefills the draft model into its
+        own pool (no sampling — the target's admission token is the one
+        committed)."""
         import jax
         from repro.kernels import ops
         from repro.models import model as MDL
         from repro.models import paged_cache as PC
-        key_ = (plen, width, sampled)
+        cfg = self.draft_cfg if draft else self.cfg
+        key_ = (plen, width, sampled, draft)
         fn = self._admit_fns.get(key_)
         if fn is None:
             self.compiles += 1
 
             def run(p, caches, batch, slots, table_rows, key):
-                last_h, dense = MDL.prefill(p, self.cfg, batch, max_len=plen,
+                last_h, dense = MDL.prefill(p, cfg, batch, max_len=plen,
                                             impl=self.impl)
-                logits0 = MDL.logits_of(p, self.cfg, last_h[:, None])[:, 0]
+                logits0 = MDL.logits_of(p, cfg, last_h[:, None])[:, 0]
                 tok0, lp0 = ops.sample_logits(
                     logits0, key if sampled else None,
                     temperature=self.temperature, sampler=self.sampler,
                     top_k=self.top_k, top_p=self.top_p, impl=self.impl)
-                caches = PC.paged_insert(self.cfg, caches, dense, slots,
+                caches = PC.paged_insert(cfg, caches, dense, slots,
                                          table_rows, plen)
                 return tok0, lp0, caches
 
@@ -237,19 +283,22 @@ class ContinuousBatchServer:
         self._results[req.rid] = (np.asarray(req.tokens, np.int32),
                                   np.asarray(req.logps, np.float32))
         self.completion_order.append(req.rid)
-        self.alloc.free(req.blocks)
-        req.blocks = []
+        if self._t_serve0 is not None:
+            self._latencies[req.rid] = time.perf_counter() - self._t_serve0
+        req.blocks = self.alloc.truncate_to(req.blocks, 0)
         self.table[slot, :] = 0
         self.seq_lens[slot] = 0
         self.cur_tok[slot] = 0
         self.slots[slot] = None
 
     def _preempt(self, slot: int):
-        """Recompute-style preemption: free the victim's blocks and requeue
-        it (it restarts from its prompt on re-admission), re-inserted in
-        arrival order so FCFS admission is preserved."""
+        """Recompute-style preemption: free the victim's blocks (a
+        truncate-to-zero — the same path a rejected speculative draft takes,
+        just all the way down) and requeue it (it restarts from its prompt
+        on re-admission), re-inserted in arrival order so FCFS admission is
+        preserved."""
         req = self.slots[slot]
-        self.alloc.free(req.blocks)
+        req.blocks = self.alloc.truncate_to(req.blocks, 0)
         req.reset()
         idx = 0
         while idx < len(self.queue) and self.queue[idx].rid < req.rid:
@@ -306,6 +355,16 @@ class ContinuousBatchServer:
                 jnp.asarray(slots_arr), jnp.asarray(table_arr),
                 self._next_key())
             tok0, lp0 = np.asarray(tok0), np.asarray(lp0)
+            if self.draft_cfg is not None:
+                # mirror the prompt into the draft's statically-owned rows
+                d_rows = np.zeros((width, nb), np.int32)
+                for row in range(len(batch_reqs)):
+                    d_rows[row] = self.d_table[free[row], :nb]
+                _, _, self.d_caches = self._admit_fn(
+                    pb, width, False, draft=True)(
+                    self.draft_params, self.d_caches,
+                    {"tokens": jnp.asarray(toks)}, jnp.asarray(slots_arr),
+                    jnp.asarray(d_rows), self._next_key())
             for row, req in enumerate(batch_reqs):
                 slot = free[row]
                 req.tokens.append(int(tok0[row]))
@@ -320,20 +379,23 @@ class ContinuousBatchServer:
                             and req.tokens[-1] == self.eos_id)):
                     self._complete(slot)
 
-    def _ensure_blocks(self):
+    def _ensure_blocks(self, span=None):
         """Grow each active row's block list to cover the whole upcoming
-        decode chunk (``sync_every`` writes), preempting the youngest
-        request when the pool runs dry.
+        dispatch — ``span`` positions past the current one (default: the
+        ``sync_every`` decode chunk; a speculative verify passes its draft
+        length) — preempting the youngest request when the pool runs dry.
 
         Rows grow oldest-first, and a row never evicts an older one — if
         only older rows remain as victims, the growing row preempts
         *itself* — so the oldest request always makes forward progress."""
+        if span is None:
+            span = self.sync_every - 1
         for slot in sorted(self._active(),
                            key=lambda s: self.slots[s].rid):
             req = self.slots[slot]
             if req is None:  # preempted by an earlier iteration
                 continue
-            need = (int(self.seq_lens[slot]) + self.sync_every - 1) // self.bs
+            need = (int(self.seq_lens[slot]) + span) // self.bs
             while need >= len(req.blocks):
                 if self.alloc.free_count > 0:
                     blk = self.alloc.alloc(1)[0]
@@ -378,6 +440,78 @@ class ContinuousBatchServer:
                     self._complete(slot)
                     break
 
+    def _spec_step(self, sampled: bool):
+        """One speculative cycle for every slot: k+1 fused draft steps (the
+        last is the consume-only catch-up), one prefill-shaped target verify
+        over the k+1 spec positions, batched rejection sampling, host-side
+        commit.  Inactive slots ride along against scratch block 0 exactly
+        as in ``_decode_step``; their outputs are ignored.  Committed tokens
+        and logprobs are exact target samples, so EOS / max_new trimming is
+        a pure suffix drop."""
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models import spec as SPEC
+        ctl = self.spec_controller
+        k = ctl.k if ctl is not None else self.spec_k
+        self.spec_k_trace.append(k)
+        # span=k+1: verify writes positions seq_lens..seq_lens+k, and a
+        # clean sweep commits k+1 tokens so the post-commit truncate_to
+        # keeps blocks covering index seq_lens+k+1
+        self._ensure_blocks(span=k + 1)
+        if self._d_table_dev is None:
+            self._d_table_dev = jnp.asarray(self.d_table)
+        pos0 = self.seq_lens.astype(np.int32)
+        draft = SPEC._draft_run(self.draft_cfg, sampled, self.temperature,
+                                self.sampler, self.top_k, self.top_p,
+                                self.impl)
+        verify = SPEC._verify_run(self.cfg, sampled, self.temperature,
+                                  self.top_k, self.top_p, self.impl)
+        keys = (jnp.stack([self._next_key() for _ in range(k + 1)])
+                if sampled else jnp.zeros((k + 1, 2), jnp.uint32))
+        dtoks, dlgs, self.d_caches = draft(
+            self.draft_params, self.d_caches, self._d_table_dev,
+            jnp.asarray(self.cur_tok), jnp.asarray(pos0), keys)
+        dtoks = np.asarray(dtoks)[:, :k]
+        dlgs_dev = jnp.asarray(np.asarray(dlgs)[:, :k])
+        tokens = np.concatenate([self.cur_tok[:, None], dtoks], axis=1)
+        positions = pos0[:, None] + np.arange(k + 1, dtype=np.int32)[None]
+        acc, ytok, ylp, dlps, self.caches = verify(
+            self.params, self.caches, jnp.asarray(self.table),
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(dtoks), dlgs_dev, self._next_key())
+        acc, ytok = np.asarray(acc), np.asarray(ytok)
+        ylp, dlps = np.asarray(ylp), np.asarray(dlps)
+        self.steps += 1
+        self.spec_cycles += 1
+        cyc_acc = cyc_prop = 0
+        for slot in self._active():
+            req = self.slots[slot]
+            r = int(acc[slot])
+            cyc_acc += r
+            cyc_prop += k
+            committed = [(int(tokens[slot, 1 + j]), float(dlps[slot, j]))
+                         for j in range(r)] + [(int(ytok[slot]),
+                                                float(ylp[slot]))]
+            for t, lp in committed:
+                self.seq_lens[slot] += 1
+                req.tokens.append(t)
+                req.logps.append(float(lp))
+                self.cur_tok[slot] = t
+                if (len(req.tokens) >= req.max_new
+                        or (self.eos_id is not None and t == self.eos_id)):
+                    self._complete(slot)
+                    break
+            else:
+                # row survives: drop the blocks past the committed length
+                # (prompt bucket is already folded into seq_lens)
+                c = int(self.seq_lens[slot]) + 1
+                req.blocks = self.alloc.truncate_to(req.blocks, c)
+                self.table[slot, len(req.blocks):] = 0
+        self.spec_accepted += cyc_acc
+        self.spec_proposed += cyc_prop
+        if ctl is not None and cyc_prop:
+            ctl.update(cyc_acc / cyc_prop)
+
     # -------------------------------------------------------------- serving
     def serve(self, prompts, rng=None, max_new=None):
         """prompts: list of 1-D int32 arrays (ragged).  ``max_new``: int or
@@ -413,10 +547,18 @@ class ContinuousBatchServer:
                     f"request {r.rid}: prompt bucket {pb} + max_new "
                     f"{r.max_new} exceeds max_len {self.max_len}")
         self.queue.extend(reqs)
+        # per-request latency clock; restarted (and the samples reset) per
+        # serve() call so stats() reflects the most recent cohort
+        self._latencies = {}
+        self._t_serve0 = time.perf_counter()
+        spec = self.draft_cfg is not None
         while self.queue or self._active():
             self._try_admit(sampled)
             if self._active():
-                self._decode_step(sampled)
+                if spec:
+                    self._spec_step(sampled)
+                else:
+                    self._decode_step(sampled)
             elif self.queue:
                 raise MemoryError(
                     "queued request cannot be admitted into an empty "
@@ -426,9 +568,25 @@ class ContinuousBatchServer:
         return toks, lps
 
     def stats(self) -> dict:
-        return {"steps": self.steps, "preemptions": self.preemptions,
-                "compiles": self.compiles, "peak_blocks": self.alloc.peak,
-                "completion_order": list(self.completion_order)}
+        out = {"steps": self.steps, "preemptions": self.preemptions,
+               "compiles": self.compiles, "peak_blocks": self.alloc.peak,
+               "completion_order": list(self.completion_order)}
+        if self._latencies:
+            lats = sorted(self._latencies.values())
+
+            def pct(q):
+                return lats[min(len(lats) - 1, int(q * len(lats)))]
+            out["latency_s"] = {"p50": pct(0.50), "p99": pct(0.99),
+                                "n": len(lats)}
+        if self.draft_cfg is not None:
+            out.update(
+                spec_cycles=self.spec_cycles,
+                spec_accepted=self.spec_accepted,
+                spec_proposed=self.spec_proposed,
+                spec_accept_rate=(self.spec_accepted
+                                  / max(self.spec_proposed, 1)),
+                spec_k_trace=list(self.spec_k_trace))
+        return out
 
     def kv_peak_bytes(self) -> int:
         from repro.models import paged_cache as PC
@@ -437,9 +595,11 @@ class ContinuousBatchServer:
 
 
 def build_server(cfg, params, exp, *, max_prompt: int = 128,
-                 max_new: int = 128):
+                 max_new: int = 128, draft_params=None):
     """Construct the serve engine selected by ``ExperimentConfig.serve_mode``
-    ("bucketed" | "continuous"), plumbing the sampler/kv knobs through."""
+    ("bucketed" | "continuous"), plumbing the sampler/kv knobs through.
+    With ``exp.draft_model`` set AND ``draft_params`` given, the continuous
+    engine runs speculative draft-and-verify cycles."""
     if exp.serve_mode == "bucketed":
         return BatchServer(cfg, params, max_new=max_new, eos_id=exp.eos_id,
                            sampler=exp.sampler, top_k=exp.top_k,
@@ -448,12 +608,21 @@ def build_server(cfg, params, exp, *, max_prompt: int = 128,
     if exp.serve_mode != "continuous":
         raise ValueError(f"serve_mode={exp.serve_mode!r} not in "
                          "('bucketed', 'continuous')")
+    spec_kw = {}
+    if draft_params is not None and getattr(exp, "draft_model", None) \
+            is not None:
+        from repro.models.spec import SpecController
+        spec_kw = dict(
+            draft_params=draft_params, draft_cfg=exp.draft_model,
+            spec_k=exp.spec_k,
+            spec_controller=(SpecController(init_k=exp.spec_k)
+                             if exp.spec_adaptive else None))
     return ContinuousBatchServer(
         cfg, params, kv_block_size=exp.kv_block_size,
         max_kv_blocks=exp.max_kv_blocks, max_prompt=max_prompt,
         max_new=max_new, eos_id=exp.eos_id, sampler=exp.sampler,
         top_k=exp.top_k, top_p=exp.top_p,
-        impl=exp.rollout_impl or exp.impl)
+        impl=exp.rollout_impl or exp.impl, **spec_kw)
 
 
 def main():
@@ -466,6 +635,10 @@ def main():
                     choices=["bucketed", "continuous"])
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding demo (self-draft: the target "
+                         "drafts for itself, accept rate ~1)")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args()
 
     import jax
@@ -487,13 +660,20 @@ def main():
         out = server.serve(prompts, jax.random.PRNGKey(1))
         extra = f"buckets={sorted(server._compiled_buckets)}"
     else:
+        spec_kw = {}
+        if args.spec:
+            spec_kw = dict(draft_params=params, draft_cfg=cfg,
+                           spec_k=args.spec_k)
         server = ContinuousBatchServer(
             cfg, params, n_slots=args.slots, kv_block_size=args.block_size,
-            max_prompt=64, max_new=args.new)
+            max_prompt=64, max_new=args.new, **spec_kw)
         out, _ = server.serve(prompts, jax.random.PRNGKey(1))
         st = server.stats()
         extra = (f"steps={st['steps']} peak_blocks={st['peak_blocks']} "
                  f"kv_peak={server.kv_peak_bytes()}B")
+        if args.spec:
+            extra += (f" accept={st['spec_accept_rate']:.2f} "
+                      f"cycles={st['spec_cycles']}")
     dt = time.time() - t0
     toks = sum(len(o) for o in out)
     print(f"served {len(prompts)} ragged requests in {dt:.1f}s "

@@ -1,15 +1,20 @@
 from repro.models.model import (decode_step, forward, generate, init_params,
                                 input_specs, lm_loss, logits_of,
-                                paged_decode_and_sample_step, prefill,
-                                synth_batch, values_of)
+                                paged_decode_and_sample_step, paged_draft_step,
+                                paged_verify_step, prefill, synth_batch,
+                                values_of)
 from repro.models.paged_cache import (BlockAllocator, full_buffer_bytes,
                                       kv_pool_bytes, needed_blocks,
                                       paged_cache_init, paged_insert)
+from repro.models.spec import (SpecController, check_spec_pair,
+                               paged_generate, spec_generate, spec_supported)
 
 __all__ = [
-    "BlockAllocator", "decode_step", "forward", "full_buffer_bytes",
-    "generate", "init_params", "input_specs", "kv_pool_bytes", "lm_loss",
-    "logits_of", "needed_blocks", "paged_cache_init",
-    "paged_decode_and_sample_step", "paged_insert", "prefill", "synth_batch",
-    "values_of",
+    "BlockAllocator", "SpecController", "check_spec_pair", "decode_step",
+    "forward",
+    "full_buffer_bytes", "generate", "init_params", "input_specs",
+    "kv_pool_bytes", "lm_loss", "logits_of", "needed_blocks",
+    "paged_cache_init", "paged_decode_and_sample_step", "paged_draft_step",
+    "paged_generate", "paged_insert", "paged_verify_step", "prefill",
+    "spec_generate", "spec_supported", "synth_batch", "values_of",
 ]

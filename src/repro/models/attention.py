@@ -158,6 +158,69 @@ def paged_attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
     return y, new_cache
 
 
+def paged_attn_verify_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
+                            block_table, positions, *, impl="reference"):
+    """Multi-token (speculative verify) decode through the paged block pool.
+
+    x: (B, K, D) — the spec window (last committed token + draft tokens);
+    positions: (B, K) int32 absolute per-token positions, consecutive per
+    row.  All K tokens' roped KV is scattered into the pool first (distinct
+    (block, offset) slots per row — consecutive positions never collide),
+    then query j attends every logical position <= positions[b, j].
+    Returns (y, new_cache)."""
+    b, kk, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
+    bs = cache["k"].shape[1]
+    blk = block_table[jnp.arange(b)[:, None], positions // bs]  # (B, K)
+    off = positions % bs
+    new_cache = {
+        "k": cache["k"].at[blk, off].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[blk, off].set(v.astype(cache["v"].dtype)),
+    }
+    out = ops.paged_verify_mha(q, new_cache["k"], new_cache["v"], block_table,
+                               q_positions=positions, impl=impl)
+    y = L.dense_apply(p["wo"], out.reshape(b, kk, cfg.q_dim).astype(x.dtype))
+    return y, new_cache
+
+
+def ragged_attn_verify_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
+                             positions, *, impl="reference"):
+    """Multi-token (speculative verify) step over a sliding-window ring.
+
+    Writing all K tokens into the ring *before* attending would let the
+    late writes evict slots the early queries still need (K fresh tokens
+    overwrite the K oldest ring entries, which sit inside the first
+    query's window when the ring capacity equals the window).  So the ring
+    is linearized instead: each ring slot is tagged with the logical
+    position of the token it currently holds, the K new tokens are
+    appended as extra keys, and one banded attention over explicit
+    positions scores everything.  The ring is updated afterwards."""
+    assert spec.window is not None, \
+        "ragged verify is ring-cache only; use paged_attn_verify_apply"
+    b, kk, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=True)
+    cap = cache["k"].shape[1]
+    assert kk <= cap, f"spec window {kk} exceeds ring capacity {cap}"
+    p0 = positions[:, :1]  # (B, 1) position of the first new token
+    s = jnp.arange(cap)[None, :]
+    # latest logical position t < p0 with t % cap == s; < 0 => never written
+    t = p0 - 1 - ((p0 - 1 - s) % cap)
+    kv_pos = jnp.where(t >= 0, t, jnp.int32(2 ** 30))  # causal-masks unwritten
+    keys = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+    vals = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    kv_positions = jnp.concatenate([kv_pos, positions], axis=1)
+    out = ops.mha(q, keys, vals, causal=True, window=spec.window,
+                  q_positions=positions, kv_positions=kv_positions, impl=impl)
+    rows = jnp.arange(b)[:, None]
+    slot = positions % cap
+    new_cache = {
+        "k": cache["k"].at[rows, slot].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[rows, slot].set(v.astype(cache["v"].dtype)),
+    }
+    y = L.dense_apply(p["wo"], out.reshape(b, kk, cfg.q_dim).astype(x.dtype))
+    return y, new_cache
+
+
 def ragged_attn_decode_apply(p, cfg: ModelConfig, spec: LayerSpec, x, cache,
                              positions, *, impl="reference"):
     """Per-row-position variant of :func:`attn_decode_apply` for

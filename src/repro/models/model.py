@@ -192,6 +192,44 @@ def paged_decode_and_sample_step(params, cfg: ModelConfig, token, caches,
     return tok, lp, caches
 
 
+def paged_draft_step(params, cfg: ModelConfig, token, caches, block_table,
+                     positions, key, *, temperature: float = 1.0,
+                     sampler: str = "cdf", top_k: int = 0, top_p: float = 1.0,
+                     impl="reference"):
+    """Draft-model decode step: like :func:`paged_decode_and_sample_step`
+    but also returns the full (B, V) logits — the verify step's residual
+    resampling needs the draft's proposal distribution, not just the
+    sampled token.  Returns (next_token (B,), logits (B, V) f32, caches)."""
+    x = L.embed_apply(params["embed"], token[:, None]).astype(cfg.dtype)
+    h, caches = T.stack_paged_decode(params["groups"], cfg, x, caches,
+                                     block_table, positions, impl=impl)
+    h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_of(params, cfg, h)[:, 0].astype(jnp.float32)
+    tok, _ = ops.sample_logits(logits, key, temperature=temperature,
+                               sampler=sampler, top_k=top_k, top_p=top_p,
+                               impl=impl)
+    return tok, logits, caches
+
+
+def paged_verify_step(params, cfg: ModelConfig, tokens, caches, block_table,
+                      positions, *, impl="reference"):
+    """Speculative verify-step forward: score a whole draft window in one
+    prefill-shaped dispatch against the paged KV cache.
+
+    tokens: (B, K) — the last committed token followed by the draft's
+    proposals; positions: (B, K) their absolute per-row positions.  Every
+    token's KV is appended to the paged pool and position i's returned
+    logits are the target's next-token distribution after consuming
+    tokens[:, :i+1] — bit-consistent with i single-token decode steps (the
+    rejection-sampling invariant rests on this).  Returns
+    (logits (B, K, V) f32, caches)."""
+    x = L.embed_apply(params["embed"], tokens).astype(cfg.dtype)
+    h, caches = T.stack_paged_verify(params["groups"], cfg, x, caches,
+                                     block_table, positions, impl=impl)
+    h = L.rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    return logits_of(params, cfg, h).astype(jnp.float32), caches
+
+
 def generate(params, cfg: ModelConfig, batch, *, num_new_tokens: int,
              rng=None, temperature: float = 1.0, impl="reference",
              fused: bool = True, eos_id: int | None = None,
@@ -359,7 +397,12 @@ class BucketedGenerator:
         self.hits = 0
 
     def _fn(self, prompt_bucket: int, gen_bucket: int, sampled: bool):
-        key = (prompt_bucket, gen_bucket, sampled)
+        # The compiled fn closes over every mutable sampling attribute below,
+        # so each of them must be part of the cache key — otherwise switching
+        # e.g. top_k after construction silently reuses a stale program.
+        key = (prompt_bucket, gen_bucket, sampled, self.sampler, self.top_k,
+               self.top_p, self.eos_id, self.temperature, self.fused,
+               self.impl)
         fn = self._fns.get(key)
         if fn is None:
             self.compiles += 1

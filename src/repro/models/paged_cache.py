@@ -74,6 +74,22 @@ class BlockAllocator:
             self._used.remove(i)
             self._free.append(i)
 
+    def truncate_to(self, blocks: list[int], n_tokens: int) -> list[int]:
+        """Free the tail of a sequence's block list in one call, keeping just
+        enough blocks to cover ``n_tokens`` tokens.  Returns the retained
+        prefix (a new list; the input is not mutated).
+
+        The speculative-decode rejection path calls this after every verify
+        step that rejects draft tokens; preemption recompute shares it with
+        ``n_tokens=0`` (free everything)."""
+        keep = needed_blocks(n_tokens, self.block_size) if n_tokens > 0 else 0
+        if keep > len(blocks):
+            raise ValueError(
+                f"truncate_to({n_tokens}) needs {keep} blocks, "
+                f"sequence owns {len(blocks)}")
+        self.free(blocks[keep:])
+        return list(blocks[:keep])
+
     def reset_peak(self) -> None:
         self.peak = len(self._used)
 

@@ -150,6 +150,30 @@ def block_paged_decode(p, cfg, spec, x, cache, block_table, positions, *,
     return x, new_cache
 
 
+def block_paged_verify(p, cfg, spec, x, cache, block_table, positions, *,
+                       impl="reference"):
+    """K-token speculative verify block step.  x: (B, K, D); positions:
+    (B, K) per-token absolute positions.  Attention-only: recurrent mixers
+    would need per-step state rollback on draft rejection, so they are
+    rejected here (the spec-decode entry points gate on this upfront).
+    Returns (x, new_cache)."""
+    if spec.kind != ATTN:
+        raise NotImplementedError(
+            f"speculative verify is attention-only; got mixer kind "
+            f"{spec.kind}")
+    h = L.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if spec.window is None:
+        y, new_cache = A.paged_attn_verify_apply(
+            p["mixer"], cfg, spec, h, cache, block_table, positions,
+            impl=impl)
+    else:
+        y, new_cache = A.ragged_attn_verify_apply(
+            p["mixer"], cfg, spec, h, cache, positions, impl=impl)
+    x = x + y
+    x, _ = _ffn(p, cfg, x, impl=impl, want_aux=False)
+    return x, new_cache
+
+
 # -------------------------------------------------------------- scan groups
 
 def group_init(key, cfg: ModelConfig, specs, n: int, cross: bool = False):
@@ -271,6 +295,27 @@ def stack_paged_decode(groups_params, cfg: ModelConfig, x, caches,
             out_cache = {}
             for i, spec in enumerate(specs):
                 xc, out_cache[f"b{i}"] = block_paged_decode(
+                    layer_p[f"b{i}"], cfg, spec, xc, cache[f"b{i}"],
+                    block_table, positions, impl=impl)
+            return xc, out_cache
+        x, nc = jax.lax.scan(body, x, (gp, gc))
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def stack_paged_verify(groups_params, cfg: ModelConfig, x, caches,
+                       block_table, positions, *, impl="reference"):
+    """x: (B, K, D) — one speculative verify window per row; block_table:
+    (B, M) int32; positions: (B, K) int32 per-token positions.  Returns
+    (x, new_caches)."""
+    new_caches = []
+    for (specs, n), gp, gc in zip(groups_of(cfg), groups_params, caches):
+        def body(xc, inp, specs=specs):
+            xc = ctx.constrain(xc, ctx.BATCH, None, None)
+            layer_p, cache = inp
+            out_cache = {}
+            for i, spec in enumerate(specs):
+                xc, out_cache[f"b{i}"] = block_paged_verify(
                     layer_p[f"b{i}"], cfg, spec, xc, cache[f"b{i}"],
                     block_table, positions, impl=impl)
             return xc, out_cache

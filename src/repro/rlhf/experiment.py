@@ -108,6 +108,20 @@ class ExperimentConfig:
     # Rollout/inference paths are unchanged; train cost scales with real
     # token counts (and the estimator keys on them, Workload.total_tokens).
     packed_training: bool = False
+    # speculative draft-and-verify rollout (models/spec.py): a small frozen
+    # draft model proposes spec_k tokens per cycle, the actor verifies them
+    # in one prefill-shaped dispatch, rejection sampling keeps the rollout
+    # distribution exactly the actor's (logprobs stay PPO-exact).  The
+    # draft is a first-class planned model: build_ppo adds a draft_gen
+    # call, the searcher places it on its own sub-mesh, and measured
+    # accept rates feed back into the CostModel (record_accept_rate).
+    # Must share the actor's vocab and be attention-only; EOS early-exit
+    # (eos_id) is not supported on the speculative path.
+    draft_model: Optional[ModelConfig] = None
+    spec_k: int = 4  # draft length (fixed, or the initial value if adaptive)
+    # re-pick k every cycle from the measured accept-rate EMA and the
+    # calibrated estimator's cycle cost (models.spec.SpecController)
+    spec_adaptive: bool = True
 
 
 class RLHFExperiment:
@@ -128,10 +142,17 @@ class RLHFExperiment:
                 msg = packed_mixer_error(cfg)
                 if msg:
                     raise ValueError(msg)
+        if exp.draft_model is not None:
+            from repro.models.spec import check_spec_pair
+            check_spec_pair(actor_cfg, exp.draft_model)  # fail at construction
+            if exp.eos_id is not None:
+                raise ValueError("eos_id early exit is not supported on the "
+                                 "speculative rollout path; unset draft_model "
+                                 "or eos_id")
         self.graph = DFG.build_ppo(
             actor_cfg, critic_cfg, batch=exp.batch, prompt_len=exp.prompt_len,
             gen_len=exp.gen_len, n_minibatches=exp.ppo.n_minibatches,
-            packed=exp.packed_training)
+            packed=exp.packed_training, draft=exp.draft_model)
         self.cost = CostModel(cluster)
         self.profile_store = None
         if exp.profile_path:
@@ -199,6 +220,12 @@ class RLHFExperiment:
             self.exp.opt, self.models["actor"].params)
         self.models["critic"].opt_state = adamw.init(
             self.exp.opt, self.models["critic"].params)
+        if self.exp.draft_model is not None:
+            # frozen proposal model (no TRAIN call, no opt state); its own
+            # seed stream so shrinking the draft never perturbs the actor
+            drng = jax.random.PRNGKey(self.exp.seed + 17)
+            self.models["draft"] = ModelState(
+                MDL.init_params(drng, self.exp.draft_model, head="lm"))
 
     # ---------------------------------------------------------- executors
     def _build_executors(self):
@@ -251,6 +278,52 @@ class RLHFExperiment:
                                     out["tokens"]], axis=1)
             mask = out.get("gen_mask", jnp.ones_like(out["logprobs"]))
             return {"seq": toks, "logp": out["logprobs"], "gen_mask": mask}
+
+        if exp.draft_model is not None:
+            from repro.models import spec as SPEC
+            controller = None
+            if exp.spec_adaptive:
+                # drive k from the same calibrated estimator that placed
+                # both models, when the plan knows where they sit
+                cycle_cost = None
+                a_asg = self.plan.assignments.get("actor_gen")
+                d_asg = self.plan.assignments.get("draft_gen")
+                if a_asg is not None and d_asg is not None:
+                    cycle_cost = self.cost.spec_cycle_time_fn(
+                        a_cfg, exp.draft_model, exp.batch,
+                        exp.prompt_len + exp.gen_len // 2, a_asg, d_asg)
+                controller = SPEC.SpecController(
+                    init_k=exp.spec_k, cycle_cost=cycle_cost)
+            self.spec_controller = controller
+            models = self.models
+
+            def draft_gen(ms, inputs):
+                # the plan places the draft here and the simulator costs
+                # its dispatches/realloc edges; at runtime the proposal
+                # stream is interleaved into the verify loop below, so
+                # this call just publishes the dependency token
+                b = inputs["prompts"]["tokens"].shape[0]
+                return {"draft_seq": jnp.zeros((b,), jnp.int32)}
+
+            def actor_gen_spec(ms, inputs):
+                state["rng"], k = jax.random.split(state["rng"])
+                out = SPEC.spec_generate(
+                    ms.params, a_cfg, models["draft"].params,
+                    exp.draft_model, inputs["prompts"],
+                    num_new_tokens=exp.gen_len, spec_k=exp.spec_k, rng=k,
+                    sampler=exp.sampler, top_k=exp.top_k, top_p=exp.top_p,
+                    impl=rollout_impl, block_size=exp.kv_block_size,
+                    controller=controller)
+                # measured accept rate closes the estimator loop
+                self.cost.record_accept_rate(
+                    "actor", out["stats"]["accept_rate"])
+                toks = jnp.concatenate([inputs["prompts"]["tokens"],
+                                        out["tokens"]], axis=1)
+                return {"seq": toks, "logp": out["logprobs"],
+                        "gen_mask": jnp.ones_like(out["logprobs"]),
+                        "spec_stats": out["stats"]}
+
+            actor_gen = actor_gen_spec
 
         def reward_inf(ms, inputs):
             full_mask = jnp.ones(inputs["seq"].shape, jnp.float32)
@@ -344,6 +417,8 @@ class RLHFExperiment:
             "ref_inf": ref_inf, "critic_inf": critic_inf,
             "actor_train": actor_train, "critic_train": critic_train,
         }
+        if exp.draft_model is not None:
+            self.executors["draft_gen"] = draft_gen
 
     # ------------------------------------------------------------ running
     def make_prompts(self, rng):
